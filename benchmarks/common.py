@@ -1,0 +1,103 @@
+"""Shared benchmark helpers: timed training/eval on the synthetic tasks."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import icl_batch, markov_lm_batch
+from repro.models import build_model
+from repro.optim import AdamW, linear_warmup_cosine
+from repro.train import TrainState, make_train_step, make_eval_step
+
+
+def tiny_cfg(**overrides):
+    cfg = get_config("paper-tiny")
+    return cfg.replace(**overrides) if overrides else cfg
+
+
+def train_model(model, cfg, *, steps: int, batch: int = 16, seq: int = 64,
+                lr: float = 3e-3, seed: int = 7, task: str = "markov"):
+    """Train and return (model, final_loss, s_per_step)."""
+    opt = AdamW(linear_warmup_cosine(lr, steps // 10 + 1, steps),
+                weight_decay=0.01, master_fp32=False)
+    state = TrainState(model=model, opt=opt.init(model),
+                       step=jnp.zeros((), jnp.int32))
+    step_fn = jax.jit(make_train_step(opt))
+
+    def get_batch(i):
+        if task == "markov":
+            b = markov_lm_batch(i, batch=batch, seq=seq, vocab=cfg.vocab,
+                                seed=seed)
+            return {"tokens": b.tokens, "labels": b.labels}
+        b = icl_batch(i, batch=batch, n_pairs=max(seq // 4, 2),
+                      vocab=cfg.vocab, seed=seed)
+        return {"tokens": b.tokens, "labels": b.labels}
+
+    # warmup/compile
+    state, metrics = step_fn(state, get_batch(0))
+    jax.block_until_ready(metrics["loss"])
+    t0 = time.time()
+    for i in range(1, steps):
+        state, metrics = step_fn(state, get_batch(i))
+    jax.block_until_ready(metrics["loss"])
+    dt = (time.time() - t0) / max(steps - 1, 1)
+    return state.model, float(metrics["loss"]), dt
+
+
+def eval_loss(model, cfg, *, batches: int = 8, batch: int = 32,
+              seq: int = 64, seed: int = 7, task: str = "markov"):
+    """Returns (mean loss, s_per_batch forward).
+
+    NOTE: must use the TRAINING seed — the seed selects the underlying
+    Markov chain; evaluation uses unseen steps (10k+) of the same chain."""
+    eval_fn = jax.jit(make_eval_step())
+    tot = 0.0
+    # compile
+    b = markov_lm_batch(10_000, batch=batch, seq=seq, vocab=cfg.vocab,
+                        seed=seed)
+    m = eval_fn(model, {"tokens": b.tokens, "labels": b.labels})
+    jax.block_until_ready(m["loss"])
+    t0 = time.time()
+    for i in range(batches):
+        b = markov_lm_batch(10_001 + i, batch=batch, seq=seq,
+                            vocab=cfg.vocab, seed=seed)
+        m = eval_fn(model, {"tokens": b.tokens, "labels": b.labels})
+        tot += float(m["loss"])
+    dt = (time.time() - t0) / batches
+    return tot / batches, dt
+
+
+def icl_accuracy(model, cfg, *, batches: int = 8, batch: int = 64,
+                 n_pairs: int = 8, seed: int = 99):
+    """Few-shot induction accuracy: argmax at the query position."""
+
+    @jax.jit
+    def acc_fn(model, tokens, qpos, answer):
+        logits, _ = model(tokens)
+        pred = jnp.argmax(
+            jnp.take_along_axis(logits, qpos[:, None, None], axis=1)[:, 0],
+            axis=-1)
+        return jnp.mean((pred == answer).astype(jnp.float32))
+
+    b = icl_batch(50_000, batch=batch, n_pairs=n_pairs, vocab=cfg.vocab,
+                  seed=seed)
+    a = acc_fn(model, b.tokens, b.query_pos, b.answer)
+    jax.block_until_ready(a)
+    t0 = time.time()
+    tot = 0.0
+    for i in range(batches):
+        b = icl_batch(50_001 + i, batch=batch, n_pairs=n_pairs,
+                      vocab=cfg.vocab, seed=seed)
+        tot += float(acc_fn(model, b.tokens, b.query_pos, b.answer))
+    dt = (time.time() - t0) / batches
+    return tot / batches, dt
+
+
+def param_millions(model) -> float:
+    from repro.nn import param_count
+
+    return param_count(model) / 1e6

@@ -1,0 +1,105 @@
+"""Benchmark aggregator — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract, plus
+the full per-figure tables.  Figures:
+  fig2-left   factorization-by-design      (benchmarks/fig2_design.py)
+  fig2-center post-training factorization  (benchmarks/fig2_posttrain.py)
+  fig2-right  in-context-learning fact.    (benchmarks/fig2_icl.py)
+  speed       LED vs dense micro-bench     (benchmarks/speed_led.py)
+  roofline    dry-run roofline table       (artifacts/dryrun/*.json)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _section(title: str) -> None:
+    print(f"\n### {title}", flush=True)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--fast", action="store_true",
+                   help="fewer training steps (CI mode)")
+    args = p.parse_args()
+    fast = args.fast
+
+    from benchmarks import fig2_design, fig2_icl, fig2_posttrain, speed_led
+
+    csv_rows = []
+
+    _section("fig2-left: factorization-by-design (train from scratch)")
+    rows = fig2_design.run(steps=60 if fast else 150)
+    for r in rows:
+        print(r)
+        csv_rows.append((f"fig2_design/{r['variant']}",
+                         r["train_s_per_step"] * 1e6,
+                         f"rel_perf={r['rel_perf']:.3f};"
+                         f"speedup={r['speedup']:.2f}"))
+
+    _section("fig2-center: post-training factorization (no retrain)")
+    rows = fig2_posttrain.run(steps=80 if fast else 200)
+    for r in rows:
+        print(r)
+        csv_rows.append((f"fig2_posttrain/{r['variant']}", 0.0,
+                         f"rel_perf={r['rel_perf']:.3f};"
+                         f"speedup={r['speedup']:.2f}"))
+
+    _section("fig2-right: in-context-learning factorization")
+    rows = fig2_icl.run(steps=150 if fast else 400)
+    for r in rows:
+        print(r)
+        csv_rows.append((f"fig2_icl/{r['variant']}", 0.0,
+                         f"icl_acc={r['icl_acc']:.3f};"
+                         f"speedup={r['speedup']:.2f}"))
+
+    _section("beyond-paper: factorize-then-finetune recovery")
+    from benchmarks import posttrain_finetune
+
+    rows = posttrain_finetune.run(steps=80 if fast else 200,
+                                  ft_steps=30 if fast else 60)
+    for r in rows:
+        print(r)
+        csv_rows.append((f"posttrain_ft/{r['variant']}", 0.0,
+                         f"rel_perf={r['rel_perf']:.3f}"))
+
+    _section("speed: LED vs dense linear")
+    rows = speed_led.run()
+    for r in rows:
+        print(r)
+        csv_rows.append((f"speed_led/{r['shape']}@r{r['rank']}",
+                         r["led_us"],
+                         f"speedup={r['speedup']:.2f};"
+                         f"theory={r['theory_speedup']:.2f}"))
+
+    _section("roofline: dry-run artifacts (single-pod)")
+    try:
+        from repro.launch.roofline import HEADER, fmt_row, load_cells
+
+        cells = load_cells("pod")
+        if cells:
+            print(HEADER)
+            for d in cells:
+                print(fmt_row(d))
+                r = d["roofline"]
+                csv_rows.append((
+                    f"roofline/{d['arch']}/{d['shape']}",
+                    r["compute_s"] * 1e6,
+                    f"dominant={r['dominant']}"))
+        else:
+            print("(no dry-run artifacts; run python -m repro.launch.dryrun --all)")
+    except Exception as e:  # roofline is optional when artifacts are absent
+        print(f"(roofline skipped: {e})")
+
+    _section("CSV")
+    print("name,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

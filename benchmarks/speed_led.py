@@ -1,0 +1,59 @@
+"""LED vs dense Linear micro-benchmark (wall time + theoretical FLOPs).
+
+Measures the jnp path (the one XLA optimizes on every backend).  The Pallas
+kernel targets TPU; on this CPU container it runs in interpret mode, so its
+wall-time is not meaningful — its contribution is measured structurally in
+the roofline (§Perf: HBM traffic of the fused vs unfused LED).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+
+SIZES = [(1024, 1024, 1024), (2048, 2048, 2048), (4096, 1024, 4096)]
+RATIOS = (0.5, 0.25, 0.1)
+
+
+def _time(fn, *args, iters: int = 20) -> float:
+    fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.time() - t0) / iters
+
+
+def run() -> list[dict]:
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for m, k, n in SIZES:
+        x = jax.random.normal(key, (m, k))
+        lin = nn.Linear.create(key, k, n)
+        t_dense = _time(jax.jit(lambda x, l: l(x)), x, lin)
+        for ratio in RATIOS:
+            r = max(1, int(ratio * (k * n) / (k + n)))
+            led = nn.LED.create(key, k, n, r)
+            t_led = _time(jax.jit(lambda x, l: l(x)), x, led)
+            flop_ratio = (k * n) / (r * (k + n))
+            rows.append({
+                "shape": f"{m}x{k}x{n}", "rank": r,
+                "dense_us": t_dense * 1e6, "led_us": t_led * 1e6,
+                "speedup": t_dense / t_led,
+                "theory_speedup": flop_ratio,
+            })
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print(",".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                       for k, v in row.items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Greenformer-JAX quickstart — the paper's one-line API.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro import auto_fact
+from repro.configs import get_config
+from repro.models import build_model
+from repro.nn import param_count
+
+key = jax.random.PRNGKey(0)
+
+# 1. build any model in the framework (a small dense LM here)
+cfg = get_config("paper-tiny")
+model = build_model(key, cfg)
+print(f"dense model: {param_count(model)/1e6:.2f}M params")
+
+# 2. ONE LINE: factorize every linear/conv layer with the SVD solver.
+#    rank may be an int (absolute) or a float (ratio of each layer's r_max).
+fact_model, report = auto_fact(
+    model, rank=0.25, solver="svd", num_iter=50,
+    exclude=["embed", "lm_head"],  # the paper's submodule filtering
+    return_report=True)
+print(report.summary())
+
+# 3. the factorized model is a drop-in replacement
+tokens = jax.random.randint(key, (2, 32), 0, cfg.vocab)
+dense_logits, _ = model(tokens)
+fact_logits, _ = fact_model(tokens)
+print(f"output shape: {fact_logits.shape} (same as dense: "
+      f"{dense_logits.shape == fact_logits.shape})")
+print(f"factorized params: {param_count(fact_model)/1e6:.2f}M "
+      f"({param_count(model)/param_count(fact_model):.2f}x smaller incl. "
+      "embeddings)")
+
+# 4. it trains / differentiates like any pytree module
+grads = jax.grad(
+    lambda m: jnp.mean(m(tokens)[0].astype(jnp.float32) ** 2))(fact_model)
+print("grad of a factor:", grads.blocks.attn.q_proj.A.shape)

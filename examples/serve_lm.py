@@ -1,0 +1,12 @@
+"""Batched serving with a factorized model (paper use case 2, serving side).
+
+    PYTHONPATH=src python examples/serve_lm.py --batch 8 --gen 32 --fact-rank 0.5
+
+Wraps the production serve driver: dense vs SVD-factorized tokens/s plus
+greedy-token agreement between the two.
+"""
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    raise SystemExit(serve_main())

@@ -1,0 +1,33 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+Greenformer factorization-by-design, checkpointing, and resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--fact-rank 0.25]
+
+This is deliberately the same code path as the production launcher
+(repro/launch/train.py); on CPU a ~100M model is slow, so the default config
+here is ~10M — pass --big for the ~100M variant if you have the patience.
+"""
+
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--fact-rank", type=float, default=0.25)
+    p.add_argument("--big", action="store_true")
+    p.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = p.parse_args()
+
+    argv = ["--arch", "paper-tiny", "--steps", str(args.steps),
+            "--batch", "16", "--seq", "128",
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100"]
+    if args.fact_rank:
+        argv += ["--fact-rank", str(args.fact_rank), "--solver", "random"]
+    raise SystemExit(train_main(argv))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""repro — Greenformer (factorization toolkit) as a JAX/TPU training and
+serving framework.
+
+Public one-liner API, mirroring the paper:
+
+    from repro import auto_fact
+    fact_model = auto_fact(model, rank=128, solver='svd', num_iter=50)
+"""
+
+from repro.core import auto_fact, defactorize, r_max, resolve_rank
+
+__all__ = ["auto_fact", "defactorize", "r_max", "resolve_rank"]
+__version__ = "1.0.0"

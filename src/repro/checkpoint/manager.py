@@ -1,0 +1,134 @@
+"""Fault-tolerant checkpointing: atomic, manifest-driven, keep-last-k.
+
+Layout:
+  <dir>/step_000123/
+      manifest.json    {step, leaf paths, shapes, dtypes, treedef-hash}
+      arrays.npz       every array leaf, keyed by flattened path
+  <dir>/LATEST         text file naming the newest *complete* step dir
+
+Writes go to ``step_X.tmp`` and are renamed only after fsync — a process
+killed mid-write never corrupts the latest checkpoint, so crash/preempt →
+relaunch → ``restore_latest`` always resumes from a consistent state.  On a
+multi-host pod each process writes ``arrays.p<proc>.npz`` for its addressable
+shards (single-process here: one file).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import zlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: x is None)[0]
+    out = {}
+    for key_path, leaf in leaves:
+        out[jax.tree_util.keystr(key_path)] = leaf
+    return out
+
+
+def _treedef_hash(tree) -> str:
+    treedef = jax.tree_util.tree_structure(tree, is_leaf=lambda x: x is None)
+    return hex(zlib.crc32(str(treedef).encode()))
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ----------------------------------------------------------------
+
+    def save(self, step: int, tree: Any) -> str:
+        name = f"step_{step:08d}"
+        final = os.path.join(self.dir, name)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+
+        flat = _flatten(tree)
+        arrays = {k: np.asarray(v) for k, v in flat.items() if v is not None}
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "treedef": _treedef_hash(tree),
+            "leaves": {k: (None if v is None else
+                           [list(np.shape(v)), str(np.asarray(v).dtype)])
+                       for k, v in flat.items()},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final)  # atomic publish
+        with open(os.path.join(self.dir, "LATEST.tmp"), "w") as f:
+            f.write(name)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(os.path.join(self.dir, "LATEST.tmp"),
+                   os.path.join(self.dir, "LATEST"))
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, d, "manifest.json")):
+                    out.append(int(d[len("step_"):]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        latest = os.path.join(self.dir, "LATEST")
+        if os.path.exists(latest):
+            with open(latest) as f:
+                name = f.read().strip()
+            path = os.path.join(self.dir, name, "manifest.json")
+            if os.path.exists(path):
+                return int(name[len("step_"):])
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, template: Any) -> Any:
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        if manifest["treedef"] != _treedef_hash(template):
+            raise ValueError(
+                "checkpoint treedef mismatch — template structure changed")
+        data = np.load(os.path.join(path, "arrays.npz"))
+
+        flat_template = jax.tree_util.tree_flatten_with_path(
+            template, is_leaf=lambda x: x is None)
+        leaves = []
+        for key_path, leaf in flat_template[0]:
+            name = jax.tree_util.keystr(key_path)
+            if leaf is None:
+                leaves.append(None)
+            else:
+                arr = data[name]
+                leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(flat_template[1], leaves)
+
+    def restore_latest(self, template: Any) -> tuple[Optional[int], Any]:
+        step = self.latest_step()
+        if step is None:
+            return None, template
+        return step, self.restore(step, template)

@@ -1,0 +1,14 @@
+from repro.core.auto_fact import auto_fact, defactorize, FactReport
+from repro.core.rank import r_max, resolve_rank, should_factorize
+from repro.core.solvers import (SOLVERS, get_solver, random_solver, snmf_solver,
+                                svd_solver)
+from repro.core.gradcomp import (CompressorState, compress_and_reduce,
+                                 compression_ratio, init_compressor)
+
+__all__ = [
+    "auto_fact", "defactorize", "FactReport",
+    "r_max", "resolve_rank", "should_factorize",
+    "SOLVERS", "get_solver", "random_solver", "svd_solver", "snmf_solver",
+    "CompressorState", "compress_and_reduce", "compression_ratio",
+    "init_compressor",
+]

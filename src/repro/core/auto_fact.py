@@ -1,0 +1,160 @@
+"""``auto_fact`` — the paper's one-line automatic factorization API.
+
+    from repro import auto_fact
+    fact_model = auto_fact(model, rank=128, solver='svd', num_iter=50)
+
+Walks the module tree, replaces every ``Linear`` with an ``LED`` and every
+``Conv1D``/``Conv2D`` with a ``CED1D``/``CED2D`` whenever the resolved rank
+passes the paper's ``r < r_max`` gate.  Supports:
+
+* ``rank`` as an absolute int or a float ratio of each layer's ``r_max``
+  (the paper's dynamic rank);
+* ``solver`` ∈ {'random', 'svd', 'snmf'} (random = factorization-by-design);
+* ``submodules`` / ``exclude`` path filters (the paper's filtering feature);
+* stacked weights (layer-scanned or expert-stacked ``Linear``s) — solvers are
+  batched over the leading axes, so e.g. all 384 experts of kimi-k2
+  factorize in one call.
+
+Being a pure pytree→pytree function it composes with jit/pjit sharding.
+"""
+
+from __future__ import annotations
+
+import fnmatch
+import zlib
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rank import Rank, r_max, resolve_rank
+from repro.core.solvers import get_solver
+from repro.nn.conv import CED1D, CED2D, Conv1D, Conv2D
+from repro.nn.linear import LED, Linear
+from repro.nn.module import Module, map_modules
+
+
+@dataclass
+class FactReport:
+    """What auto_fact did, layer by layer."""
+
+    entries: list = field(default_factory=list)  # (path, kind, m, n, r) tuples
+    skipped: list = field(default_factory=list)  # (path, reason)
+    params_before: int = 0
+    params_after: int = 0
+
+    @property
+    def compression(self) -> float:
+        return self.params_before / max(self.params_after, 1)
+
+    def summary(self) -> str:
+        lines = [f"auto_fact: {len(self.entries)} layers factorized, "
+                 f"{len(self.skipped)} skipped"]
+        lines += [f"  [fact] {p} ({kind}) {m}x{n} -> r={r}"
+                  for p, kind, m, n, r in self.entries]
+        lines += [f"  [skip] {p}: {why}" for p, why in self.skipped]
+        if self.params_before:
+            lines.append(
+                f"  target params: {self.params_before:,} -> "
+                f"{self.params_after:,} ({self.compression:.2f}x)")
+        return "\n".join(lines)
+
+
+def _matches(path: str, patterns: Optional[Sequence[str]]) -> bool:
+    if patterns is None:
+        return True
+    return any(p in path or fnmatch.fnmatch(path, p) for p in patterns)
+
+
+def _layer_key(base_key, path: str):
+    return jax.random.fold_in(base_key, zlib.crc32(path.encode()) & 0x7FFFFFFF)
+
+
+def auto_fact(
+    module: Module,
+    rank: Rank,
+    *,
+    solver: str = "svd",
+    num_iter: int = 50,
+    key: Optional[jax.Array] = None,
+    submodules: Optional[Sequence[str]] = None,
+    exclude: Optional[Sequence[str]] = None,
+    factorize_linear: bool = True,
+    factorize_conv: bool = True,
+    fuse: str = "auto",
+    return_report: bool = False,
+):
+    """Factorize a model. See module docstring. Returns the new model
+    (and a :class:`FactReport` when ``return_report=True``)."""
+    solve = get_solver(solver)
+    if solver == "random" and key is None:
+        key = jax.random.PRNGKey(0)
+    report = FactReport()
+
+    def visit(path: str, node: Module):
+        if not isinstance(node, (Linear, Conv1D, Conv2D)):
+            return node  # keep recursing
+        if not _matches(path, submodules) or (exclude and _matches(path, exclude)):
+            report.skipped.append((path, "filtered"))
+            return node
+
+        if isinstance(node, Linear):
+            if not factorize_linear:
+                return node
+            *stack, m, n = node.weight.shape
+        else:
+            if not factorize_conv:
+                return node
+            if isinstance(node, Conv1D):
+                c_in, c_out, s = node.weight.shape
+                m, n = c_in * s, c_out
+            else:
+                c_in, c_out, kh, kw = node.weight.shape
+                m, n = c_in * kh * kw, c_out
+            stack = []
+
+        r = resolve_rank(rank, m, n)
+        if r >= r_max(m, n):
+            report.skipped.append(
+                (path, f"rank {r} >= r_max {r_max(m, n):.1f} ({m}x{n})"))
+            return node
+
+        lkey = _layer_key(key, path) if key is not None else None
+        report.params_before += node.weight.size
+        if isinstance(node, Linear):
+            a, b = solve(node.weight, r, key=lkey, num_iter=num_iter)
+            new = LED(A=a, B=b, bias=node.bias, fuse=fuse)
+            report.entries.append((path, "linear", m, n, r))
+        elif isinstance(node, Conv1D):
+            w_mat = jnp.transpose(node.weight, (0, 2, 1)).reshape(m, n)
+            a_mat, b_mat = solve(w_mat, r, key=lkey, num_iter=num_iter)
+            a = a_mat.reshape(c_in, s, r).transpose(0, 2, 1)  # (Cin, r, S)
+            b = b_mat[:, :, None]  # (r, Cout, 1)
+            new = CED1D(A=a, B=b, bias=node.bias, stride=node.stride,
+                        padding=node.padding)
+            report.entries.append((path, "conv1d", m, n, r))
+        else:
+            w_mat = jnp.transpose(node.weight, (0, 2, 3, 1)).reshape(m, n)
+            a_mat, b_mat = solve(w_mat, r, key=lkey, num_iter=num_iter)
+            a = a_mat.reshape(c_in, kh, kw, r).transpose(0, 3, 1, 2)
+            b = b_mat[:, :, None, None]
+            new = CED2D(A=a, B=b, bias=node.bias, stride=node.stride,
+                        padding=node.padding)
+            report.entries.append((path, "conv2d", m, n, r))
+        report.params_after += a.size + b.size
+        return new
+
+    fact = map_modules(module, visit)
+    return (fact, report) if return_report else fact
+
+
+def defactorize(module: Module):
+    """Inverse convenience: collapse every LED/CED back to a dense layer."""
+
+    def visit(path: str, node: Module):
+        if isinstance(node, (LED, CED1D, CED2D)):
+            return node.materialize()
+        return node
+
+    return map_modules(module, visit)

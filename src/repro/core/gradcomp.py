@@ -1,0 +1,129 @@
+"""Low-rank gradient compression (beyond-paper distributed optimization).
+
+Greenformer's insight — a rank-r factorization carries most of a matrix's
+information at a fraction of the cost — applies to *gradients* as well as
+weights.  This module implements PowerSGD-style (Vogels et al., 2019)
+compressed data-parallel gradient reduction with error feedback:
+
+  per matrix-shaped gradient G (m×n), with a persistent right factor Q (n×r):
+    1. G ← G + E              (error feedback)
+    2. P = G Q                (m×r)   → all-reduce P   (r·m bytes vs m·n)
+    3. P = orthonormalize(P)
+    4. Q = Gᵀ P               (n×r)   → all-reduce Q
+    5. Ĝ = P Qᵀ ; E = G − Ĝ
+
+The all-reduce volume drops from ``m·n`` to ``r·(m+n)`` — the same ratio the
+paper's Eq. 1 gives for weights.  Non-matrix leaves (biases, norms, scalars)
+are reduced exactly.
+
+Inside ``shard_map`` the reductions are ``jax.lax.psum`` over the data axis;
+outside (single-device tests) they are identity.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressorState(NamedTuple):
+    q: dict  # path -> (n, r) right factors
+    err: dict  # path -> (m, n) error-feedback buffers
+
+
+def _is_matrix(x) -> bool:
+    return hasattr(x, "ndim") and x.ndim >= 2 and min(x.shape[-2:]) > 1
+
+
+def _flatten_to_mat(g):
+    """(..., m, n) -> (m', n) folding leading axes into rows."""
+    *lead, m, n = g.shape
+    return g.reshape(-1, n), (*lead, m, n)
+
+
+def _orthonormalize(p):
+    """Gram-Schmidt via QR (fp32 for stability)."""
+    q, _ = jnp.linalg.qr(p.astype(jnp.float32))
+    return q.astype(p.dtype)
+
+
+def init_compressor(grads, rank: int, key: jax.Array) -> CompressorState:
+    qs, errs = {}, {}
+    flat = jax.tree_util.tree_flatten_with_path(grads)[0]
+    for key_path, leaf in flat:
+        if leaf is None or not _is_matrix(leaf):
+            continue
+        name = jax.tree_util.keystr(key_path)
+        mat, _ = _flatten_to_mat(leaf)
+        n = mat.shape[1]
+        key, sub = jax.random.split(key)
+        qs[name] = jax.random.normal(sub, (n, rank), leaf.dtype)
+        errs[name] = jnp.zeros_like(leaf)
+    return CompressorState(q=qs, err=errs)
+
+
+def compress_and_reduce(
+    grads,
+    state: CompressorState,
+    *,
+    axis_name: Optional[str] = None,
+    mean: bool = True,
+):
+    """Reduce `grads` across `axis_name` with low-rank compression.
+
+    Returns (reduced_grads, new_state).  Must be called inside shard_map /
+    vmap with the given axis name; with ``axis_name=None`` the reduction is
+    the identity (useful for tests — compression error still applies).
+    """
+
+    def reduce_exact(x):
+        if axis_name is None:
+            return x
+        y = jax.lax.psum(x, axis_name)
+        return y / jax.lax.psum(1, axis_name) if mean else y
+
+    new_q, new_err, out = dict(state.q), dict(state.err), {}
+    flat = jax.tree_util.tree_flatten_with_path(grads)
+    leaves = {}
+    for key_path, leaf in flat[0]:
+        name = jax.tree_util.keystr(key_path)
+        if leaf is None:
+            leaves[name] = leaf
+            continue
+        if name not in state.q:  # exact reduction for non-matrix leaves
+            leaves[name] = reduce_exact(leaf)
+            continue
+        g = leaf + state.err[name]
+        mat, shape = _flatten_to_mat(g)
+        q = state.q[name]
+        p = reduce_exact(mat @ q)  # all-reduce #1: (m, r)
+        p = _orthonormalize(p)
+        q = reduce_exact(mat.T @ p)  # all-reduce #2: (n, r)
+        ghat = (p @ q.T).reshape(shape)
+        new_q[name] = q
+        new_err[name] = g - ghat
+        leaves[name] = ghat
+
+    rebuilt = jax.tree_util.tree_unflatten(
+        flat[1], [leaves[jax.tree_util.keystr(kp)] for kp, _ in flat[0]])
+    return rebuilt, CompressorState(q=new_q, err=new_err)
+
+
+def compression_ratio(grads, rank: int) -> float:
+    """Bytes all-reduced with compression / bytes without."""
+    dense = 0
+    comp = 0
+    for leaf in jax.tree_util.tree_leaves(grads):
+        if leaf is None:
+            continue
+        if _is_matrix(leaf):
+            mat, _ = _flatten_to_mat(leaf)
+            m, n = mat.shape
+            dense += m * n
+            comp += rank * (m + n)
+        else:
+            dense += leaf.size
+            comp += leaf.size
+    return comp / max(dense, 1)

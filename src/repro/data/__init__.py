@@ -1,0 +1,8 @@
+from repro.data.pipeline import DataLoader, place_batch
+from repro.data.synthetic import (ClsBatch, ICLBatch, LMBatch,
+                                  classification_batch, icl_batch,
+                                  markov_entropy_floor, markov_lm_batch)
+
+__all__ = ["DataLoader", "place_batch", "ClsBatch", "ICLBatch", "LMBatch",
+           "classification_batch", "icl_batch", "markov_entropy_floor",
+           "markov_lm_batch"]

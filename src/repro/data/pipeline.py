@@ -1,0 +1,36 @@
+"""Sharded batching: place a global synthetic batch on the mesh.
+
+The generator is pure ``(seed, step) -> global batch``; this module only
+handles device placement.  On a real multi-host pod each process would
+generate its local shard directly (the generator is index-addressable), so
+no host ever materializes the global array — here (single process) we place
+the global batch with the batch-dim sharding from dist.sharding.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.dist.sharding import data_sharding
+
+
+def place_batch(batch, mesh):
+    def place(x):
+        return jax.device_put(x, data_sharding(mesh, x.shape))
+
+    return jax.tree_util.tree_map(place, batch)
+
+
+class DataLoader:
+    """Step-indexed loader: ``loader(step)`` returns the placed batch."""
+
+    def __init__(self, gen_fn, mesh=None, **gen_kwargs):
+        self.gen_fn = gen_fn
+        self.mesh = mesh
+        self.gen_kwargs = gen_kwargs
+
+    def __call__(self, step):
+        batch = self.gen_fn(step, **self.gen_kwargs)
+        if self.mesh is not None:
+            batch = place_batch(batch, self.mesh)
+        return batch

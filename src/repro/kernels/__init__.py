@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: the fused LED
+(low-rank) matmul.  See led_matmul.py (kernel), ops.py (jit wrappers +
+custom VJP), ref.py (pure-jnp oracle)."""
+
+from repro.kernels.ops import led_matmul, led_matmul_ref, led_matmul_trainable
+
+__all__ = ["led_matmul", "led_matmul_ref", "led_matmul_trainable"]

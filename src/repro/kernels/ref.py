@@ -1,0 +1,18 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness reference)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def led_matmul_ref(x: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """y = (x @ A) @ B with fp32 accumulation.
+
+    x: (..., K); a: (K, R); b: (R, N) -> y: (..., N) in x.dtype.
+    """
+    t = jnp.dot(x.astype(jnp.float32), a.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    y = jnp.dot(t, b.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,293 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell we build ShapeDtypeStruct stand-ins (zero allocation), pjit the
+step function onto the production mesh, ``.lower().compile()``, and record:
+  * memory_analysis()  — per-device argument/output/temp bytes (fits check)
+  * cost_analysis()    — HLO FLOPs + HBM bytes for the roofline
+  * collective bytes   — parsed from the optimized HLO (see hlo_analysis)
+
+Artifacts land in artifacts/dryrun/<arch>__<shape>__<mesh>.json; the roofline
+table (launch/roofline.py, EXPERIMENTS.md §Roofline) is derived from them.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all            # every cell, both meshes
+  python -m repro.launch.dryrun --all --mesh pod # every cell, single-pod
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def _active_param_counts(model_sds, cfg) -> tuple[int, int]:
+    """(total params, active-per-token params) from the SDS tree."""
+    import jax
+
+    total = 0
+    active = 0.0
+    flat = jax.tree_util.tree_flatten_with_path(
+        model_sds, is_leaf=lambda x: x is None)[0]
+    for key_path, leaf in flat:
+        if leaf is None or not hasattr(leaf, "size"):
+            continue
+        path = jax.tree_util.keystr(key_path)
+        total += leaf.size
+        if ".experts." in path:
+            active += leaf.size * (cfg.top_k / max(cfg.n_experts, 1))
+        elif "embed" in path and "pos" not in path:
+            continue  # embedding lookups are gathers, not matmuls
+        else:
+            active += leaf.size
+    return total, int(active)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             fact_rank: float = 0.0, tag: str = "",
+             seq_parallel: bool = False, cache_dtype: str = "bfloat16",
+             attn_chunk: int = 0) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_config, SHAPES
+    from repro.core import auto_fact
+    from repro.dist.sharding import (activation_mesh, cache_shardings,
+                                     data_sharding, model_shardings)
+    from repro.launch.hlo_analysis import (Roofline, collective_stats,
+                                           model_flops)
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import input_specs, model_specs
+    from repro.optim import AdamW
+    from repro.optim.adamw import AdamWState
+    from repro.train import TrainState, make_train_step
+
+    cfg = get_config(arch)
+    if attn_chunk:
+        cfg = cfg.replace(attn_chunk=attn_chunk)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    n_chips = mesh.devices.size
+    fsdp = True  # ZeRO-style param+optimizer sharding across the data axes
+
+    is_train = shape.kind == "train"
+    model_sds = model_specs(cfg, remat=is_train)
+    if fact_rank:
+        # factorization-by-design inside eval_shape: LED-structured model
+        model_sds = jax.eval_shape(
+            lambda m: auto_fact(m, fact_rank, solver="random",
+                                key=jax.random.PRNGKey(0)), model_sds)
+    ms = model_shardings(model_sds, mesh, fsdp=fsdp)
+    specs = input_specs(cfg, shape_name, cache_dtype=cache_dtype)
+    repl = NamedSharding(mesh, P())
+
+    t0 = time.time()
+    if is_train:
+        opt = AdamW(1e-3, master_fp32=True)
+        opt_sds = jax.eval_shape(opt.init, model_sds)
+        state_sds = TrainState(model=model_sds, opt=opt_sds,
+                               step=jax.ShapeDtypeStruct((), jnp.int32))
+        opt_sh = AdamWState(step=repl, m=ms, v=ms,
+                            master=ms if opt.master_fp32 else None)
+        state_sh = TrainState(model=ms, opt=opt_sh, step=repl)
+        batch_sds = specs["batch"]
+        batch_sh = {k: data_sharding(mesh, v.shape)
+                    for k, v in batch_sds.items()}
+        step_fn = make_train_step(opt)
+        with mesh, activation_mesh(mesh, seq_parallel=seq_parallel):
+            lowered = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                              donate_argnums=(0,)).lower(state_sds, batch_sds)
+    elif shape.kind == "prefill":
+        cache_sds = specs["cache"]
+        cache_sh = cache_shardings(cache_sds, mesh)
+        tok_sh = data_sharding(mesh, specs["tokens"].shape)
+        if cfg.family == "encdec":
+            def prefill_fn(model, frames, tokens, cache):
+                return model.prefill(frames, tokens, cache)
+            fr_sh = data_sharding(mesh, specs["frames"].shape)
+            with mesh, activation_mesh(mesh, seq_parallel=seq_parallel):
+                lowered = jax.jit(
+                    prefill_fn,
+                    in_shardings=(ms, fr_sh, tok_sh, cache_sh),
+                    donate_argnums=(3,),
+                ).lower(model_sds, specs["frames"], specs["tokens"], cache_sds)
+        else:
+            def prefill_fn(model, tokens, cache):
+                return model.prefill(tokens, cache)
+            with mesh, activation_mesh(mesh, seq_parallel=seq_parallel):
+                lowered = jax.jit(
+                    prefill_fn, in_shardings=(ms, tok_sh, cache_sh),
+                    donate_argnums=(2,),
+                ).lower(model_sds, specs["tokens"], cache_sds)
+    else:  # decode
+        cache_sds = specs["cache"]
+        cache_sh = cache_shardings(cache_sds, mesh)
+        tok_sh = data_sharding(mesh, specs["token"].shape)
+
+        def decode_fn(model, token, cache):
+            return model.decode(token, cache)
+
+        with mesh, activation_mesh(mesh, seq_parallel=seq_parallel):
+            lowered = jax.jit(
+                decode_fn, in_shardings=(ms, tok_sh, cache_sh),
+                donate_argnums=(2,),
+            ).lower(model_sds, specs["token"], cache_sds)
+
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    # raw XLA numbers (count while-loop bodies ONCE — kept for reference)
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    # trip-count-aware analysis (correct for scan-over-layers models)
+    from repro.launch.hlo_costs import analyze
+
+    hlo_text = compiled.as_text()
+    costs = analyze(hlo_text)
+    # the partitioned HLO has PER-DEVICE shapes; globalize so the roofline
+    # formulas (X / (chips * rate)) yield per-chip seconds.
+    flops = costs.flops * n_chips
+    hbm_bytes = costs.bytes * n_chips
+    stats = collective_stats(hlo_text)  # single-count legacy, for reference
+    mem = compiled.memory_analysis()
+
+    total, active = _active_param_counts(model_sds, cfg)
+    n_tokens = shape.global_batch * (shape.seq_len if is_train else
+                                     (shape.seq_len if shape.kind == "prefill"
+                                      else 1))
+    mflops = model_flops(active, n_tokens, training=is_train)
+    collective_global = costs.total_collective_bytes * n_chips
+    roof = Roofline(flops=flops, hbm_bytes=hbm_bytes,
+                    collective_bytes=float(collective_global),
+                    n_chips=n_chips)
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "tag": tag or "baseline",
+        "fact_rank": fact_rank,
+        "seq_parallel": seq_parallel,
+        "cache_dtype": cache_dtype,
+        "attn_chunk": attn_chunk,
+        "n_chips": n_chips,
+        "compile_s": round(compile_s, 1),
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collective_bytes": collective_global,
+        "collectives": {"bytes_per_device": costs.collective_bytes,
+                        "count_per_device": costs.collective_count},
+        "raw_cost_analysis": {"flops": raw_flops, "bytes": raw_bytes,
+                              "collective_bytes_single_count":
+                                  stats.total_bytes},
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "params_total": total,
+        "params_active": active,
+        "model_flops": mflops,
+        "useful_flops_ratio": (mflops / flops) if flops else 0.0,
+        "roofline": roof.as_dict(),
+    }
+    return result
+
+
+def cell_path(arch, shape, mesh, tag="baseline"):
+    suffix = "" if tag == "baseline" else f"__{tag}"
+    return os.path.join(ARTIFACT_DIR,
+                        f"{arch}__{shape}__{mesh}{suffix}.json")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch")
+    p.add_argument("--shape")
+    p.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                   default="both")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--fact-rank", type=float, default=0.0,
+                   help="factorize-by-design at this rank ratio before lowering")
+    p.add_argument("--seq-parallel", action="store_true",
+                   help="Megatron sequence parallelism between blocks")
+    p.add_argument("--cache-dtype", default="bfloat16",
+                   help="KV/SSM cache dtype for decode/prefill cells")
+    p.add_argument("--attn-chunk", type=int, default=0,
+                   help="flash-style blockwise attention chunk (0 = dense)")
+    p.add_argument("--tag", default="", help="artifact filename suffix")
+    p.add_argument("--force", action="store_true")
+    args = p.parse_args()
+
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+
+    if args.all:
+        from repro.configs import ARCH_IDS, applicable_shapes, get_config
+
+        meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+        cells = [(a, s, m) for a in ARCH_IDS
+                 for s in applicable_shapes(get_config(a)) for m in meshes]
+        failures = 0
+        for arch, shape, mesh_kind in cells:
+            path = cell_path(arch, shape, mesh_kind, args.tag or "baseline")
+            if os.path.exists(path) and not args.force:
+                print(f"[skip] {arch} {shape} {mesh_kind} (cached)")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh_kind]
+            if args.fact_rank:
+                cmd += ["--fact-rank", str(args.fact_rank)]
+            if args.seq_parallel:
+                cmd += ["--seq-parallel"]
+            if args.cache_dtype != "bfloat16":
+                cmd += ["--cache-dtype", args.cache_dtype]
+            if args.attn_chunk:
+                cmd += ["--attn-chunk", str(args.attn_chunk)]
+            if args.tag:
+                cmd += ["--tag", args.tag]
+            print(f"[run ] {arch} {shape} {mesh_kind} ...", flush=True)
+            r = subprocess.run(cmd, capture_output=True, text=True)
+            if r.returncode != 0:
+                failures += 1
+                print(f"[FAIL] {arch} {shape} {mesh_kind}:\n"
+                      + r.stdout[-2000:] + r.stderr[-4000:])
+            else:
+                print(r.stdout.strip().splitlines()[-1])
+        print(f"dry-run sweep complete: {len(cells)} cells, "
+              f"{failures} failures")
+        sys.exit(1 if failures else 0)
+
+    assert args.arch and args.shape and args.mesh != "both", \
+        "single-cell mode needs --arch --shape --mesh {pod,multipod}"
+    try:
+        result = run_cell(args.arch, args.shape, args.mesh,
+                          fact_rank=args.fact_rank, tag=args.tag,
+                          seq_parallel=args.seq_parallel,
+                          cache_dtype=args.cache_dtype,
+                          attn_chunk=args.attn_chunk)
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+    path = cell_path(args.arch, args.shape, args.mesh, args.tag or "baseline")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    r = result["roofline"]
+    print(f"[ok  ] {args.arch} {args.shape} {args.mesh}: "
+          f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+          f"collective={r['collective_s']:.3e}s dominant={r['dominant']} "
+          f"compile={result['compile_s']}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,326 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE — a
+scan-over-layers transformer is undercounted by n_layers (verified
+empirically; see EXPERIMENTS.md §Dry-run-methodology).  This module parses
+the optimized HLO text into its computation graph and computes:
+
+  * flops            — 2·prod(result)·prod(contracted dims) per ``dot``
+                       (+ fusion-internal dots), ×trip-count inside whiles
+  * memory bytes     — HloCostAnalysis-style operand+result bytes per op,
+                       counting fusions as single nodes (their internals stay
+                       in registers), ×trip-count inside whiles
+  * collective bytes — result bytes per collective kind, ×trip-count
+
+While-loop trip counts are recovered from the loop condition computation
+(the scan bound appears as an ``s32[] constant(L)`` compared with the
+induction variable).
+
+This is an engineering approximation (elementwise flops ignored — dots
+dominate the compute term; layout-only ops excluded from bytes), but unlike
+raw cost_analysis it is *structurally correct* for scanned models, and it is
+used consistently across every baseline/variant comparison.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "s32": 4, "u32": 4,
+    "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops whose "bytes" are pure bookkeeping (no real data movement)
+_FREE_OPS = {"bitcast", "get-tuple-element", "tuple", "parameter",
+             "constant", "after-all", "opt-barrier"}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s([a-z][a-z0-9\-]*)\((.*)$")
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_list(text: str) -> list[tuple[str, list[int]]]:
+    return [(dt, [int(x) for x in dims.split(",") if x])
+            for dt, dims in _SHAPE_RE.findall(text)]
+
+
+def _nbytes(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        size = _DTYPE_BYTES.get(dt, 4)
+        for d in dims:
+            size *= d
+        total += size
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_shapes: list
+    operands: list
+    attrs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    defs: dict = field(default_factory=dict)  # value name -> result shapes
+    root: object = None  # the ROOT op
+    op_by_name: dict = field(default_factory=dict)
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: dict = field(default_factory=dict)
+    collective_count: dict = field(default_factory=dict)
+
+    def add(self, other: "Costs", scale: float = 1.0) -> None:
+        self.flops += other.flops * scale
+        self.bytes += other.bytes * scale
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0) + v * scale
+        for k, v in other.collective_count.items():
+            self.collective_count[k] = self.collective_count.get(k, 0) + v * scale
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def parse_computations(hlo: str) -> tuple[dict, str]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    current = None
+    for line in hlo.splitlines():
+        header = _COMP_HEADER_RE.match(line)
+        if header and line.rstrip().endswith("{"):
+            current = Computation(name=header.group(2))
+            comps[current.name] = current
+            if header.group(1):
+                entry = current.name
+            continue
+        if line.startswith("}"):
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _OP_LINE_RE.match(line)
+        if not m:
+            continue
+        name, result_txt, kind, rest = m.groups()
+        shapes = _shape_list(result_txt)
+        # operand names: %refs inside the top-level parens of the op call
+        paren = rest.split(")", 1)[0]
+        operands = _OPERAND_RE.findall(paren)
+        op = Op(name=name, kind=kind, result_shapes=shapes,
+                operands=operands, attrs=rest)
+        current.ops.append(op)
+        current.defs[name] = shapes
+        current.op_by_name[name] = op
+        if line.lstrip().startswith("ROOT"):
+            current.root = op
+    return comps, entry
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out = 1
+    for _, dims in op.result_shapes:
+        for d in dims:
+            out *= d
+    contract = 1
+    m = _CONTRACT_RE.search(op.attrs)
+    if m and op.operands:
+        lhs_shapes = comp.defs.get(op.operands[0])
+        if lhs_shapes:
+            _, lhs_dims = lhs_shapes[0]
+            for idx in (int(x) for x in m.group(1).split(",") if x):
+                if idx < len(lhs_dims):
+                    contract *= lhs_dims[idx]
+    return 2.0 * out * contract
+
+
+def _trip_count(comps: dict, cond_name: str) -> int:
+    """Scan bounds appear as s32[] constants in the loop condition; the
+    largest one is the trip count (induction starts at 0, compare is LT)."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for op in cond.ops:
+        if op.kind == "constant" and op.result_shapes == [("s32", [])]:
+            head = op.attrs.split(")")[0]
+            if head.isdigit():
+                best = max(best, int(head))
+    return best
+
+
+def _op_bytes(op: Op, comp: Computation) -> float:
+    if op.kind in _FREE_OPS:
+        return 0.0
+    result = _nbytes(op.result_shapes)
+    # indexing ops touch only the sliced region, not the whole operand
+    # (matches HloCostAnalysis semantics; critical inside scan bodies where
+    # the full layer-stacked weights are loop-invariant operands).
+    if op.kind in ("dynamic-slice", "slice", "gather"):
+        return float(2 * result)
+    if op.kind in ("dynamic-update-slice", "scatter"):
+        update = 0
+        if len(op.operands) >= 2:
+            shapes = comp.defs.get(op.operands[1])
+            if shapes:
+                update = _nbytes(shapes)
+        return float(3 * update) if update else float(result)
+    total = result
+    for o in op.operands:
+        shapes = comp.defs.get(o)
+        if shapes:
+            total += _nbytes(shapes)
+    return float(total)
+
+
+_SLICE_KINDS = ("dynamic-slice", "slice", "gather")
+
+
+def _fusion_bytes(op: Op, comp: Computation, fused: Computation | None) -> float:
+    """Fusion node traffic: result bytes + per-parameter read bytes.
+
+    A parameter consumed ONLY through slice/gather ops inside the fusion
+    (e.g. the scan body slicing one layer out of the stacked weights) reads
+    just the sliced region, not the whole operand.  Symmetrically, a fusion
+    whose ROOT is a dynamic-update-slice (the scan body writing one layer's
+    slot of a stacked accumulator in place) writes just the update region."""
+    if fused is None:
+        return float(_nbytes(op.result_shapes)) + sum(
+            _nbytes(comp.defs.get(o, [])) for o in op.operands)
+
+    def write_bytes(inner_op) -> float:
+        if inner_op is None:
+            return 0.0
+        if inner_op.kind == "dynamic-update-slice" and len(inner_op.operands) >= 2:
+            upd = fused.defs.get(inner_op.operands[1])
+            if upd:
+                return float(2 * _nbytes(upd))  # read region + write region
+        return float(_nbytes(inner_op.result_shapes))
+
+    root = fused.root or (fused.ops[-1] if fused.ops else None)
+    if root is not None and root.kind == "tuple":
+        total = sum(write_bytes(fused.op_by_name.get(o)) for o in root.operands)
+    else:
+        total = write_bytes(root)
+    # parameter index -> inner value name
+    params: dict[int, str] = {}
+    for inner_op in fused.ops:
+        if inner_op.kind == "parameter":
+            head = inner_op.attrs.split(")")[0]
+            if head.isdigit():
+                params[int(head)] = inner_op.name
+    # consumers of each inner value
+    consumers: dict[str, list[Op]] = {}
+    for inner_op in fused.ops:
+        for o in inner_op.operands:
+            consumers.setdefault(o, []).append(inner_op)
+    for idx, outer_name in enumerate(op.operands):
+        shapes = comp.defs.get(outer_name)
+        if not shapes:
+            continue
+        full = _nbytes(shapes)
+        pname = params.get(idx)
+        uses = consumers.get(pname, []) if pname else []
+
+        def use_read(u) -> float | None:
+            if u.kind in _SLICE_KINDS:
+                return float(2 * _nbytes(u.result_shapes))
+            if (u.kind == "dynamic-update-slice" and u.operands
+                    and u.operands[0] == pname):
+                return 0.0  # in-place buffer pass-through, not a full read
+            return None  # unknown: treat as full read
+
+        if uses:
+            reads = [use_read(u) for u in uses]
+            if all(r is not None for r in reads):
+                total += min(full, sum(reads))
+            else:
+                total += full
+        else:
+            total += full
+    return total
+
+
+def analyze(hlo: str) -> Costs:
+    comps, entry = parse_computations(hlo)
+
+    from functools import lru_cache
+
+    @lru_cache(maxsize=None)
+    def comp_cost(name: str) -> Costs:
+        c = Costs()
+        comp = comps.get(name)
+        if comp is None:
+            return c
+        for op in comp.ops:
+            if op.kind == "while":
+                m = _COND_BODY_RE.search(op.attrs)
+                if m:
+                    trips = _trip_count(comps, m.group(1))
+                    inner = Costs()
+                    inner.add(comp_cost(m.group(2)))
+                    inner.add(comp_cost(m.group(1)))
+                    c.add(inner, scale=trips)
+                continue
+            if op.kind == "fusion":
+                m = _CALLS_RE.search(op.attrs)
+                if m:
+                    # fused internals: count flops (dots), not bytes
+                    inner = comp_cost(m.group(1))
+                    c.flops += inner.flops
+                    for k, v in inner.collective_bytes.items():
+                        c.collective_bytes[k] = c.collective_bytes.get(k, 0) + v
+                    c.bytes += _fusion_bytes(op, comp, comps.get(m.group(1)))
+                else:
+                    c.bytes += _op_bytes(op, comp)
+                continue
+            if op.kind in ("call", "conditional", "async-start"):
+                for m in _OPERAND_RE.finditer(op.attrs):
+                    if m.group(1) in comps:
+                        c.add(comp_cost(m.group(1)))
+                c.bytes += _op_bytes(op, comp)
+                continue
+            base = op.kind.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES:
+                if op.kind.endswith("-done"):
+                    continue
+                nb = _nbytes(op.result_shapes)
+                c.collective_bytes[base] = c.collective_bytes.get(base, 0) + nb
+                c.collective_count[base] = c.collective_count.get(base, 0) + 1
+                c.bytes += _op_bytes(op, comp)
+                continue
+            if op.kind == "dot":
+                c.flops += _dot_flops(op, comp)
+            elif op.kind == "convolution":
+                # approximate: 2 * prod(result) * (input channels * window)
+                c.flops += 2.0 * _nbytes(op.result_shapes)  # coarse lower bound
+            c.bytes += _op_bytes(op, comp)
+        return c
+
+    total = Costs()
+    if entry:
+        total.add(comp_cost(entry))
+    return total

@@ -1,0 +1,127 @@
+"""§Perf hillclimb driver: run tagged dry-run variants for the three chosen
+(arch × shape) pairs and print before/after roofline comparisons.
+
+    PYTHONPATH=src python -m repro.launch.perf [--run] [--report]
+
+Variants (see EXPERIMENTS.md §Perf for the hypothesis log):
+  seqpar   — Megatron sequence parallelism between blocks
+  fact25   — Greenformer factorization-by-design @ rank ratio 0.25 (paper)
+  fact25sp — both
+  int8kv   — int8 KV cache (decode cells)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+from repro.launch.dryrun import ARTIFACT_DIR, cell_path
+
+# (arch, shape, mesh, tag, extra flags)
+VARIANTS = [
+    # pair 1 (paper-representative, biggest absolute collective load):
+    # 1T MoE — expert factorization + sequence parallelism
+    ("kimi-k2-1t-a32b", "train_4k", "pod", "fact25", ["--fact-rank", "0.25"]),
+    ("kimi-k2-1t-a32b", "train_4k", "pod", "seqpar", ["--seq-parallel"]),
+    ("kimi-k2-1t-a32b", "train_4k", "pod", "fact25sp",
+     ["--fact-rank", "0.25", "--seq-parallel"]),
+    # pair 2 (worst roofline fraction): memory-bound dense decode
+    ("yi-9b", "decode_32k", "pod", "int8kv", ["--cache-dtype", "int8"]),
+    ("yi-9b", "decode_32k", "pod", "fact25", ["--fact-rank", "0.25"]),
+    ("yi-9b", "decode_32k", "pod", "fact25int8",
+     ["--fact-rank", "0.25", "--cache-dtype", "int8"]),
+    # pair 3 (most collective-bound cell): MQA decode
+    ("granite-34b", "decode_32k", "pod", "fact25", ["--fact-rank", "0.25"]),
+    ("granite-34b", "decode_32k", "pod", "int8kv", ["--cache-dtype", "int8"]),
+    ("granite-34b", "decode_32k", "pod", "fact25int8",
+     ["--fact-rank", "0.25", "--cache-dtype", "int8"]),
+    # bonus (beyond the required three): dense train cell
+    ("yi-9b", "train_4k", "pod", "seqpar", ["--seq-parallel"]),
+    ("yi-9b", "train_4k", "pod", "fact25", ["--fact-rank", "0.25"]),
+    ("yi-9b", "train_4k", "pod", "fact25sp",
+     ["--fact-rank", "0.25", "--seq-parallel"]),
+    # bonus: flash-style chunked attention kills the O(S²) prefill temps
+    ("hymba-1.5b", "prefill_32k", "pod", "chunked", ["--attn-chunk", "1024"]),
+    ("chameleon-34b", "prefill_32k", "pod", "chunked",
+     ["--attn-chunk", "1024"]),
+    ("chameleon-34b", "prefill_32k", "pod", "chunkedsp",
+     ["--attn-chunk", "1024", "--seq-parallel"]),
+    ("yi-9b", "train_4k", "pod", "allopt",
+     ["--attn-chunk", "1024", "--seq-parallel", "--fact-rank", "0.25"]),
+    ("kimi-k2-1t-a32b", "train_4k", "pod", "allopt",
+     ["--attn-chunk", "1024", "--seq-parallel", "--fact-rank", "0.25"]),
+]
+
+
+def run_variants(force: bool = False) -> int:
+    failures = 0
+    for arch, shape, mesh, tag, flags in VARIANTS:
+        path = cell_path(arch, shape, mesh, tag)
+        if os.path.exists(path) and not force:
+            print(f"[skip] {arch} {shape} {tag} (cached)")
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", mesh, "--tag", tag] + flags
+        print(f"[run ] {arch} {shape} {mesh} {tag}", flush=True)
+        r = subprocess.run(cmd, capture_output=True, text=True)
+        if r.returncode != 0:
+            failures += 1
+            print(f"[FAIL] {tag}: {r.stdout[-1500:]}{r.stderr[-2000:]}")
+        else:
+            print(r.stdout.strip().splitlines()[-1])
+    return failures
+
+
+def _load(arch, shape, mesh, tag):
+    path = cell_path(arch, shape, mesh, tag)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def report() -> None:
+    pairs = sorted({(a, s, m) for a, s, m, _, _ in VARIANTS})
+    for arch, shape, mesh in pairs:
+        base = _load(arch, shape, mesh, "baseline")
+        if base is None:
+            continue
+        print(f"\n== {arch} × {shape} ({mesh}) ==")
+        rows = [("baseline", base)]
+        for a, s, m, tag, _ in VARIANTS:
+            if (a, s, m) == (arch, shape, mesh):
+                d = _load(a, s, m, tag)
+                if d:
+                    rows.append((tag, d))
+        print(f"{'variant':12s} {'compute_s':>11s} {'memory_s':>11s} "
+              f"{'collect_s':>11s} {'bound_s':>11s} {'dominant':>10s} "
+              f"{'Δbound':>7s}")
+        base_bound = max(base["roofline"][k]
+                         for k in ("compute_s", "memory_s", "collective_s"))
+        for tag, d in rows:
+            r = d["roofline"]
+            bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            print(f"{tag:12s} {r['compute_s']:11.3e} {r['memory_s']:11.3e} "
+                  f"{r['collective_s']:11.3e} {bound:11.3e} "
+                  f"{r['dominant']:>10s} {base_bound/bound:6.2f}x")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--run", action="store_true")
+    p.add_argument("--report", action="store_true")
+    p.add_argument("--force", action="store_true")
+    args = p.parse_args()
+    rc = 0
+    if args.run or not args.report:
+        rc = run_variants(args.force)
+    if args.report or not args.run:
+        report()
+    sys.exit(1 if rc else 0)
+
+
+if __name__ == "__main__":
+    main()

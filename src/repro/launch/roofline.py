@@ -1,0 +1,65 @@
+"""Roofline table generator: reads artifacts/dryrun/*.json, emits the
+EXPERIMENTS.md §Roofline table (single-pod baselines + any tagged variants).
+
+    PYTHONPATH=src python -m repro.launch.roofline [--mesh pod] [--markdown]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.launch.dryrun import ARTIFACT_DIR
+
+
+def load_cells(mesh: str = "pod", tag: str | None = "baseline") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("mesh") != mesh:
+            continue
+        if tag is not None and d.get("tag", "baseline") != tag:
+            continue
+        cells.append(d)
+    return cells
+
+
+def fmt_row(d: dict) -> str:
+    r = d["roofline"]
+    bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    frac = r["compute_s"] / bound if bound else 0.0
+    return (f"| {d['arch']} | {d['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {frac:.1%} | "
+            f"{d['useful_flops_ratio']:.2f} |")
+
+
+HEADER = ("| arch | shape | compute (s) | memory (s) | collective (s) | "
+          "bottleneck | roofline frac | 6ND/HLO |\n"
+          "|---|---|---|---|---|---|---|---|")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--mesh", default="pod")
+    p.add_argument("--tag", default="baseline")
+    args = p.parse_args()
+
+    cells = load_cells(args.mesh, args.tag)
+    if not cells:
+        print(f"no artifacts for mesh={args.mesh} tag={args.tag} — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return
+    print(HEADER)
+    for d in cells:
+        print(fmt_row(d))
+    print(f"\n{len(cells)} cells (mesh={args.mesh}, tag={args.tag}); "
+          "roofline frac = compute term / dominant term "
+          "(1.0 = compute-bound at the roofline).")
+
+
+if __name__ == "__main__":
+    main()

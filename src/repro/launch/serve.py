@@ -1,0 +1,76 @@
+"""Serving driver: batched prefill + decode with a (optionally factorized)
+model.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch paper-tiny \
+        --batch 8 --prompt-len 64 --gen 32 [--fact-rank 0.5 --solver svd]
+
+Demonstrates the paper's post-training-factorization use case end-to-end:
+the dense model is factorized with SVD *after* "training" (here: at init),
+then served; tokens/s for dense vs factorized are printed side by side.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import auto_fact
+from repro.models import build_model
+from repro.serve import Engine
+
+
+def bench_engine(model, cfg, batch, prompt_len, gen, max_len) -> tuple:
+    eng = Engine(model, cfg, batch=batch, max_len=max_len,
+                 cache_dtype=jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(0), (batch, prompt_len),
+                              0, cfg.vocab)
+    out = eng.greedy(toks, gen)  # warmup + compile
+    eng.reset()
+    t0 = time.time()
+    out = eng.greedy(toks, gen)
+    jax.block_until_ready(out)
+    dt = time.time() - t0
+    return out, batch * gen / dt
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="paper-tiny")
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--prompt-len", type=int, default=64)
+    p.add_argument("--gen", type=int, default=32)
+    p.add_argument("--fact-rank", type=float, default=0.0)
+    p.add_argument("--solver", default="svd")
+    p.add_argument("--reduced", action="store_true")
+    args = p.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(jax.random.PRNGKey(0), cfg)
+    max_len = args.prompt_len + args.gen
+
+    out, tps = bench_engine(model, cfg, args.batch, args.prompt_len,
+                            args.gen, max_len)
+    print(f"dense      : {tps:9.1f} tok/s   sample: {out[0, :8].tolist()}")
+
+    if args.fact_rank:
+        fact, report = auto_fact(model, args.fact_rank, solver=args.solver,
+                                 key=jax.random.PRNGKey(1),
+                                 return_report=True)
+        print(report.summary())
+        fout, ftps = bench_engine(fact, cfg, args.batch, args.prompt_len,
+                                  args.gen, max_len)
+        agree = float(jnp.mean((out == fout).astype(jnp.float32)))
+        print(f"factorized : {ftps:9.1f} tok/s   sample: "
+              f"{fout[0, :8].tolist()}  (token agreement {agree:.1%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,71 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell.
+
+``input_specs(cfg, shape)`` returns the kwargs for the step function that the
+dry-run lowers — weak-type-correct, shardable, zero allocation.  Shapes
+follow the assignment: train/prefill take the full sequence; decode shapes
+lower ONE new token against a pre-filled KV/SSM cache of ``seq_len``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeConfig
+
+WHISPER_ENC_FRAMES = 1500  # 30 s of audio after the (stubbed) conv frontend
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _cache_specs(cfg: ArchConfig, batch: int, max_len: int,
+                 dtype=jnp.bfloat16):
+    """eval_shape the model's init_cache — zero allocation."""
+    from repro.models import build_model
+
+    def mk():
+        model = build_model(jax.random.PRNGKey(0), cfg)
+        kwargs = ({"enc_len": WHISPER_ENC_FRAMES}
+                  if cfg.family == "encdec" else {})
+        return model.init_cache(batch, max_len, cfg, dtype=dtype, **kwargs)
+
+    return jax.eval_shape(mk)
+
+
+def model_specs(cfg: ArchConfig, *, remat: bool = False):
+    """ShapeDtypeStruct pytree of the model itself (no allocation)."""
+    from repro.models import build_model
+
+    return jax.eval_shape(
+        lambda: build_model(jax.random.PRNGKey(0), cfg, remat=remat))
+
+
+def input_specs(cfg: ArchConfig, shape_name: str,
+                cache_dtype: str = "bfloat16") -> dict:
+    shape: ShapeConfig = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    cdt = jnp.dtype(cache_dtype)
+
+    if shape.kind == "train":
+        batch = {"tokens": _sds((b, s), tok), "labels": _sds((b, s), tok)}
+        if cfg.family == "encdec":
+            batch["frames"] = _sds((b, WHISPER_ENC_FRAMES, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        out = {"tokens": _sds((b, s), tok),
+               "cache": _cache_specs(cfg, b, s, dtype=cdt)}
+        if cfg.family == "encdec":
+            out["frames"] = _sds((b, WHISPER_ENC_FRAMES, cfg.d_model),
+                                 jnp.dtype(cfg.dtype))
+        return out
+
+    if shape.kind == "decode":
+        return {"token": _sds((b, 1), tok),
+                "cache": _cache_specs(cfg, b, s, dtype=cdt)}
+
+    raise ValueError(shape.kind)

@@ -1,0 +1,33 @@
+"""Model factory: family string -> model class."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.models.lm import TransformerLM, DenseBlock, MoEBlock
+from repro.models.mamba import MambaLM, MambaBlock
+from repro.models.hymba import HymbaLM, HymbaBlock
+from repro.models.whisper import WhisperModel, WhisperLayerCache
+
+_FAMILIES = {
+    "dense": TransformerLM,
+    "moe": TransformerLM,
+    "vlm": TransformerLM,
+    "ssm": MambaLM,
+    "hybrid": HymbaLM,
+    "encdec": WhisperModel,
+}
+
+
+def model_class(cfg: ArchConfig):
+    return _FAMILIES[cfg.family]
+
+
+def build_model(key: jax.Array, cfg: ArchConfig, *, remat: bool = False):
+    return model_class(cfg).create(key, cfg, remat=remat)
+
+
+__all__ = ["TransformerLM", "MambaLM", "HymbaLM", "WhisperModel",
+           "WhisperLayerCache", "DenseBlock", "MoEBlock", "MambaBlock",
+           "HymbaBlock", "build_model", "model_class"]

@@ -1,0 +1,142 @@
+"""Hymba-style hybrid LM: parallel attention + SSM heads per layer + MLP."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import constrain_acts
+from repro.nn.attention import KVCache
+from repro.nn.embedding import Embedding
+from repro.nn.hybrid import HybridMixer, HybridState
+from repro.nn.linear import Linear
+from repro.nn.mlp import SwiGLU
+from repro.nn.module import Module, static_field
+from repro.nn.norm import RMSNorm
+
+
+class HymbaBlock(Module):
+    mixer_norm: RMSNorm
+    mixer: HybridMixer
+    mlp_norm: RMSNorm
+    mlp: SwiGLU
+
+    @staticmethod
+    def create(key, cfg: ArchConfig) -> "HymbaBlock":
+        km, kf = jax.random.split(key)
+        dt = jnp.dtype(cfg.dtype)
+        return HymbaBlock(
+            mixer_norm=RMSNorm.create(cfg.d_model, dtype=dt),
+            mixer=HybridMixer.create(
+                km, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, window=cfg.window,
+                ssm_state=cfg.ssm_state, ssm_head_dim=cfg.ssm_head_dim,
+                chunk=cfg.attn_chunk, dtype=dt),
+            mlp_norm=RMSNorm.create(cfg.d_model, dtype=dt),
+            mlp=SwiGLU.create(kf, cfg.d_model, cfg.d_ff, dtype=dt),
+        )
+
+    def __call__(self, x):
+        x = x + self.mixer(self.mixer_norm(x))
+        x = x + self.mlp(self.mlp_norm(x))
+        return x, jnp.zeros((), jnp.float32)
+
+    def prefill(self, x, state: HybridState):
+        m, state = self.mixer.prefill(self.mixer_norm(x), state)
+        x = x + m
+        x = x + self.mlp(self.mlp_norm(x))
+        return x, state
+
+    def decode(self, x, state: HybridState):
+        m, state = self.mixer.decode(self.mixer_norm(x), state)
+        x = x + m
+        x = x + self.mlp(self.mlp_norm(x))
+        return x, state
+
+
+class HymbaLM(Module):
+    embed: Embedding
+    blocks: HymbaBlock  # layer-stacked
+    final_norm: RMSNorm
+    lm_head: Optional[Linear]
+    n_layers: int = static_field(default=1)
+    remat: bool = static_field(default=False)
+
+    @staticmethod
+    def create(key, cfg: ArchConfig, *, remat: bool = False) -> "HymbaLM":
+        ke, kb, kh = jax.random.split(key, 3)
+        dt = jnp.dtype(cfg.dtype)
+        blocks = jax.vmap(lambda k: HymbaBlock.create(k, cfg))(
+            jax.random.split(kb, cfg.n_layers))
+        return HymbaLM(
+            embed=Embedding.create(ke, cfg.vocab, cfg.d_model, dtype=dt),
+            blocks=blocks,
+            final_norm=RMSNorm.create(cfg.d_model, dtype=dt),
+            lm_head=Linear.create(kh, cfg.d_model, cfg.vocab, dtype=dt),
+            n_layers=cfg.n_layers, remat=remat,
+        )
+
+    def _head(self, x):
+        return self.embed.attend(x) if self.lm_head is None else self.lm_head(x)
+
+    def __call__(self, tokens):
+        x = constrain_acts(self.embed(tokens))
+
+        def body(carry, blk):
+            x, aux = carry
+            fn = (lambda b, xx: b(xx))
+            if self.remat:
+                fn = jax.checkpoint(fn)
+            y, a = fn(blk, x)
+            return (constrain_acts(y), aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   self.blocks)
+        return self._head(self.final_norm(x)), aux
+
+    def init_cache(self, batch: int, max_len: int, cfg: ArchConfig,
+                   dtype=jnp.bfloat16) -> HybridState:
+        L = self.n_layers
+        slots = min(max_len, cfg.window) if cfg.window else max_len
+        kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        d_inner = cfg.ssm_expand * cfg.d_model
+        n_heads_ssm = d_inner // cfg.ssm_head_dim
+        conv_dim = d_inner + 2 * cfg.ssm_state  # n_groups = 1
+        from repro.nn.ssm import SSMState
+        return HybridState(
+            kv=KVCache(
+                k=jnp.zeros((L, batch, slots, kvh, hd), dtype),
+                v=jnp.zeros((L, batch, slots, kvh, hd), dtype),
+                length=jnp.zeros((L,), jnp.int32)),
+            ssm=SSMState(
+                conv=jnp.zeros((L, batch, 3, conv_dim), dtype),
+                ssm=jnp.zeros((L, batch, n_heads_ssm, cfg.ssm_head_dim,
+                               cfg.ssm_state), dtype)),
+        )
+
+    def prefill(self, tokens, cache: HybridState):
+        x = constrain_acts(self.embed(tokens))
+
+        def body(x, xs):
+            blk, c = xs
+            fn = (lambda b, xx, cc: b.prefill(xx, cc))
+            if self.remat:
+                fn = jax.checkpoint(fn)
+            y, c2 = fn(blk, x, c)
+            return constrain_acts(y), c2
+
+        x, new_cache = jax.lax.scan(body, x, (self.blocks, cache))
+        return self._head(self.final_norm(x[:, -1:])), new_cache
+
+    def decode(self, token, cache: HybridState):
+        x = self.embed(token)
+
+        def body(x, xs):
+            blk, c = xs
+            return blk.decode(x, c)
+
+        x, new_cache = jax.lax.scan(body, x, (self.blocks, cache))
+        return self._head(self.final_norm(x)), new_cache

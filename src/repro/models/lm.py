@@ -1,0 +1,196 @@
+"""Decoder-only transformer LM covering the dense / GQA / MoE / VLM archs.
+
+Layers are weight-stacked and executed with ``jax.lax.scan`` so the HLO is
+O(1) in depth (critical for 88-layer granite at compile time) and activation
+rematerialization applies per-layer.  The VLM arch (chameleon) is early
+fusion: VQ image tokens are ordinary vocabulary ids, so the backbone is this
+same class (frontend stubbed per the assignment).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import constrain_acts
+from repro.nn.attention import Attention, KVCache
+from repro.nn.embedding import Embedding
+from repro.nn.linear import Linear
+from repro.nn.mlp import SwiGLU
+from repro.nn.moe import MoE
+from repro.nn.module import Module, static_field
+from repro.nn.norm import RMSNorm
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+class DenseBlock(Module):
+    attn_norm: RMSNorm
+    attn: Attention
+    mlp_norm: RMSNorm
+    mlp: SwiGLU
+
+    @staticmethod
+    def create(key, cfg: ArchConfig) -> "DenseBlock":
+        ka, km = jax.random.split(key)
+        dt = _dtype(cfg)
+        return DenseBlock(
+            attn_norm=RMSNorm.create(cfg.d_model, dtype=dt),
+            attn=Attention.create(
+                ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, qkv_bias=cfg.qkv_bias,
+                rope_theta=cfg.rope_theta, window=cfg.window,
+                chunk=cfg.attn_chunk, dtype=dt),
+            mlp_norm=RMSNorm.create(cfg.d_model, dtype=dt),
+            mlp=SwiGLU.create(km, cfg.d_model, cfg.d_ff, dtype=dt),
+        )
+
+    def __call__(self, x):
+        x = x + self.attn(self.attn_norm(x))
+        x = x + self.mlp(self.mlp_norm(x))
+        return x, jnp.zeros((), jnp.float32)
+
+    def prefill(self, x, cache: KVCache):
+        a, cache = self.attn.prefill(self.attn_norm(x), cache)
+        x = x + a
+        x = x + self.mlp(self.mlp_norm(x))
+        return x, cache
+
+    def decode(self, x, cache: KVCache):
+        a, cache = self.attn.decode(self.attn_norm(x), cache)
+        x = x + a
+        x = x + self.mlp(self.mlp_norm(x))
+        return x, cache
+
+
+class MoEBlock(Module):
+    attn_norm: RMSNorm
+    attn: Attention
+    mlp_norm: RMSNorm
+    mlp: MoE
+
+    @staticmethod
+    def create(key, cfg: ArchConfig) -> "MoEBlock":
+        ka, km = jax.random.split(key)
+        dt = _dtype(cfg)
+        return MoEBlock(
+            attn_norm=RMSNorm.create(cfg.d_model, dtype=dt),
+            attn=Attention.create(
+                ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, qkv_bias=cfg.qkv_bias,
+                rope_theta=cfg.rope_theta, chunk=cfg.attn_chunk, dtype=dt),
+            mlp_norm=RMSNorm.create(cfg.d_model, dtype=dt),
+            mlp=MoE.create(km, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                           cfg.top_k, n_shared=cfg.n_shared,
+                           capacity_factor=cfg.capacity_factor, dtype=dt),
+        )
+
+    def __call__(self, x):
+        x = x + self.attn(self.attn_norm(x))
+        out = self.mlp(self.mlp_norm(x))
+        return x + out.y, out.aux_loss
+
+    def prefill(self, x, cache: KVCache):
+        a, cache = self.attn.prefill(self.attn_norm(x), cache)
+        x = x + a
+        x = x + self.mlp(self.mlp_norm(x)).y
+        return x, cache
+
+    def decode(self, x, cache: KVCache):
+        a, cache = self.attn.decode(self.attn_norm(x), cache)
+        x = x + a
+        x = x + self.mlp(self.mlp_norm(x)).y
+        return x, cache
+
+
+class TransformerLM(Module):
+    embed: Embedding
+    blocks: Module  # layer-stacked DenseBlock | MoEBlock
+    final_norm: RMSNorm
+    lm_head: Optional[Linear]  # None => tied embeddings
+    n_layers: int = static_field(default=1)
+    remat: bool = static_field(default=False)
+
+    @staticmethod
+    def create(key, cfg: ArchConfig, *, remat: bool = False) -> "TransformerLM":
+        ke, kb, kh = jax.random.split(key, 3)
+        dt = _dtype(cfg)
+        block_cls = MoEBlock if cfg.n_experts else DenseBlock
+        layer_keys = jax.random.split(kb, cfg.n_layers)
+        blocks = jax.vmap(lambda k: block_cls.create(k, cfg))(layer_keys)
+        lm_head = (None if cfg.tie_embeddings else
+                   Linear.create(kh, cfg.d_model, cfg.vocab, dtype=dt))
+        return TransformerLM(
+            embed=Embedding.create(ke, cfg.vocab, cfg.d_model, dtype=dt),
+            blocks=blocks,
+            final_norm=RMSNorm.create(cfg.d_model, dtype=dt),
+            lm_head=lm_head,
+            n_layers=cfg.n_layers,
+            remat=remat,
+        )
+
+    # -- forward --------------------------------------------------------------
+
+    def _head(self, x):
+        return self.embed.attend(x) if self.lm_head is None else self.lm_head(x)
+
+    def __call__(self, tokens: jax.Array):
+        """tokens: (batch, seq) -> logits (batch, seq, vocab), aux loss."""
+        x = constrain_acts(self.embed(tokens))
+
+        def body(carry, blk):
+            x, aux = carry
+            fn = (lambda b, xx: b(xx))
+            if self.remat:
+                fn = jax.checkpoint(fn)
+            y, a = fn(blk, x)
+            return (constrain_acts(y), aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   self.blocks)
+        return self._head(self.final_norm(x)), aux / self.n_layers
+
+    # -- serving --------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int, cfg: ArchConfig,
+                   dtype=jnp.bfloat16) -> KVCache:
+        w = cfg.window
+        slots = min(max_len, w) if w else max_len
+        kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        return KVCache(
+            k=jnp.zeros((self.n_layers, batch, slots, kvh, hd), dtype),
+            v=jnp.zeros((self.n_layers, batch, slots, kvh, hd), dtype),
+            length=jnp.zeros((self.n_layers,), jnp.int32),
+        )
+
+    def prefill(self, tokens: jax.Array, cache: KVCache):
+        """Returns logits for the LAST position + the filled cache."""
+        x = constrain_acts(self.embed(tokens))
+
+        def body(x, xs):
+            blk, c = xs
+            fn = (lambda b, xx, cc: b.prefill(xx, cc))
+            if self.remat:
+                fn = jax.checkpoint(fn)
+            y, c2 = fn(blk, x, c)
+            return constrain_acts(y), c2
+
+        x, new_cache = jax.lax.scan(body, x, (self.blocks, cache))
+        logits = self._head(self.final_norm(x[:, -1:]))
+        return logits, new_cache
+
+    def decode(self, token: jax.Array, cache: KVCache):
+        """token: (batch, 1) -> logits (batch, 1, vocab) + updated cache."""
+        x = self.embed(token)
+
+        def body(x, xs):
+            blk, c = xs
+            return blk.decode(x, c)
+
+        x, new_cache = jax.lax.scan(body, x, (self.blocks, cache))
+        return self._head(self.final_norm(x)), new_cache

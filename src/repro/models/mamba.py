@@ -1,0 +1,129 @@
+"""Mamba-2 language model (attention-free SSD stack)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import constrain_acts
+from repro.nn.embedding import Embedding
+from repro.nn.linear import Linear
+from repro.nn.module import Module, static_field
+from repro.nn.norm import RMSNorm
+from repro.nn.ssm import Mamba2Mixer, SSMState
+
+
+class MambaBlock(Module):
+    norm: RMSNorm
+    mixer: Mamba2Mixer
+
+    @staticmethod
+    def create(key, cfg: ArchConfig) -> "MambaBlock":
+        dt = jnp.dtype(cfg.dtype)
+        return MambaBlock(
+            norm=RMSNorm.create(cfg.d_model, dtype=dt),
+            mixer=Mamba2Mixer.create(
+                key, cfg.d_model, expand=cfg.ssm_expand,
+                head_dim=cfg.ssm_head_dim, d_state=cfg.ssm_state, dtype=dt),
+        )
+
+    def __call__(self, x):
+        return x + self.mixer(self.norm(x)), jnp.zeros((), jnp.float32)
+
+    def prefill(self, x, state: SSMState):
+        xin = self.norm(x)
+        z, xbc, dt = self.mixer._split(self.mixer.in_proj(xin))
+        xbc_c = self.mixer._conv(xbc)
+        xi, B, C = self.mixer._split_xbc(xbc_c)
+        y, final = self.mixer._ssd(xi, dt, B, C)
+        y = y.reshape(x.shape[0], x.shape[1], self.mixer.d_inner)
+        y = self.mixer.gate_norm(y) * jax.nn.silu(z)
+        out = x + self.mixer.out_proj(y)
+        w = self.mixer.conv_width - 1
+        conv_tail = xbc[:, -w:, :] if x.shape[1] >= w else jnp.pad(
+            xbc, ((0, 0), (w - x.shape[1], 0), (0, 0)))
+        return out, SSMState(conv=conv_tail, ssm=final)
+
+    def decode(self, x, state: SSMState):
+        y, state = self.mixer.decode(self.norm(x), state)
+        return x + y, state
+
+
+class MambaLM(Module):
+    embed: Embedding
+    blocks: MambaBlock  # layer-stacked
+    final_norm: RMSNorm
+    lm_head: Optional[Linear]
+    n_layers: int = static_field(default=1)
+    remat: bool = static_field(default=False)
+
+    @staticmethod
+    def create(key, cfg: ArchConfig, *, remat: bool = False) -> "MambaLM":
+        ke, kb, kh = jax.random.split(key, 3)
+        dt = jnp.dtype(cfg.dtype)
+        blocks = jax.vmap(lambda k: MambaBlock.create(k, cfg))(
+            jax.random.split(kb, cfg.n_layers))
+        return MambaLM(
+            embed=Embedding.create(ke, cfg.vocab, cfg.d_model, dtype=dt),
+            blocks=blocks,
+            final_norm=RMSNorm.create(cfg.d_model, dtype=dt),
+            lm_head=Linear.create(kh, cfg.d_model, cfg.vocab, dtype=dt),
+            n_layers=cfg.n_layers, remat=remat,
+        )
+
+    def _head(self, x):
+        return self.embed.attend(x) if self.lm_head is None else self.lm_head(x)
+
+    def __call__(self, tokens):
+        x = constrain_acts(self.embed(tokens))
+
+        def body(carry, blk):
+            x, aux = carry
+            fn = (lambda b, xx: b(xx))
+            if self.remat:
+                fn = jax.checkpoint(fn)
+            y, a = fn(blk, x)
+            return (constrain_acts(y), aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   self.blocks)
+        return self._head(self.final_norm(x)), aux
+
+    def init_cache(self, batch: int, max_len: int, cfg: ArchConfig,
+                   dtype=jnp.bfloat16) -> SSMState:
+        del max_len  # O(1) state — the whole point
+        mixer = Mamba2Mixer.create(  # shape-only template
+            jax.random.PRNGKey(0), cfg.d_model, expand=cfg.ssm_expand,
+            head_dim=cfg.ssm_head_dim, d_state=cfg.ssm_state, dtype=dtype)
+        s = mixer.init_state(batch, dtype=dtype)
+        L = self.n_layers
+        return SSMState(
+            conv=jnp.zeros((L, *s.conv.shape), dtype),
+            ssm=jnp.zeros((L, *s.ssm.shape), dtype))
+
+    def prefill(self, tokens, cache: SSMState):
+        x = constrain_acts(self.embed(tokens))
+
+        def body(x, xs):
+            blk, c = xs
+            fn = (lambda b, xx, cc: b.prefill(xx, cc))
+            if self.remat:
+                fn = jax.checkpoint(fn)
+            y, c2 = fn(blk, x, c)
+            return constrain_acts(y), c2
+
+        x, new_cache = jax.lax.scan(body, x, (self.blocks, cache))
+        return self._head(self.final_norm(x[:, -1:])), new_cache
+
+    def decode(self, token, cache: SSMState):
+        x = self.embed(token)
+
+        def body(x, xs):
+            blk, c = xs
+            return blk.decode(x, c)
+
+        x, new_cache = jax.lax.scan(body, x, (self.blocks, cache))
+        return self._head(self.final_norm(x)), new_cache

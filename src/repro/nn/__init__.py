@@ -1,0 +1,21 @@
+from repro.nn.module import (Module, static_field, iter_modules, map_modules,
+                             named_parameters, param_count, tree_slice)
+from repro.nn.linear import Linear, LED
+from repro.nn.conv import Conv1D, Conv2D, CED1D, CED2D
+from repro.nn.norm import RMSNorm, LayerNorm
+from repro.nn.embedding import Embedding
+from repro.nn.rotary import apply_rope
+from repro.nn.attention import Attention, KVCache
+from repro.nn.mlp import SwiGLU, GeluMLP
+from repro.nn.moe import MoE, MoEOutput
+from repro.nn.ssm import Mamba2Mixer, SSMState
+from repro.nn.hybrid import HybridMixer, HybridState
+
+__all__ = [
+    "Module", "static_field", "iter_modules", "map_modules",
+    "named_parameters", "param_count", "tree_slice",
+    "Linear", "LED", "Conv1D", "Conv2D", "CED1D", "CED2D",
+    "RMSNorm", "LayerNorm", "Embedding", "apply_rope",
+    "Attention", "KVCache", "SwiGLU", "GeluMLP", "MoE", "MoEOutput",
+    "Mamba2Mixer", "SSMState", "HybridMixer", "HybridState",
+]

@@ -1,0 +1,254 @@
+"""Grouped-query attention with RoPE, sliding windows, and KV caching.
+
+One module covers every assigned attention variant:
+  * MHA (kv_heads == heads), GQA (kv_heads < heads), MQA (kv_heads == 1)
+  * optional QKV bias (qwen2.5)
+  * optional sliding-window mask (hymba local layers)
+  * optional cross-attention (whisper decoder): keys/values from ``context``
+  * KV-cache decode path (one new token against a pre-filled cache)
+
+The projections are plain ``Linear`` modules, so Greenformer's ``auto_fact``
+factorizes them into LED layers transparently.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import Linear
+from repro.nn.module import Module, static_field
+from repro.nn.rotary import apply_rope
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (batch, max_len, kv_heads, head_dim)
+    v: jax.Array  # (batch, max_len, kv_heads, head_dim)
+    length: jax.Array  # () int32 — number of valid positions
+
+    @staticmethod
+    def zeros(batch: int, max_len: int, kv_heads: int, head_dim: int,
+              dtype=jnp.bfloat16) -> "KVCache":
+        return KVCache(
+            k=jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
+            v=jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
+            length=jnp.zeros((), jnp.int32),
+        )
+
+
+class Attention(Module):
+    q_proj: Linear
+    k_proj: Linear
+    v_proj: Linear
+    o_proj: Linear
+    num_heads: int = static_field(default=8)
+    num_kv_heads: int = static_field(default=8)
+    head_dim: int = static_field(default=64)
+    rope: bool = static_field(default=True)
+    rope_theta: float = static_field(default=10000.0)
+    window: int = static_field(default=0)  # 0 = global; >0 = sliding window
+    causal: bool = static_field(default=True)
+    chunk: int = static_field(default=0)  # >0: flash-style blockwise attention
+
+    @staticmethod
+    def create(key, dim: int, num_heads: int, num_kv_heads: int, *,
+               head_dim: Optional[int] = None, qkv_bias: bool = False,
+               rope: bool = True, rope_theta: float = 10000.0, window: int = 0,
+               causal: bool = True, chunk: int = 0,
+               dtype=jnp.float32) -> "Attention":
+        head_dim = head_dim or dim // num_heads
+        kq, kk, kv, ko = jax.random.split(key, 4)
+        return Attention(
+            q_proj=Linear.create(kq, dim, num_heads * head_dim, use_bias=qkv_bias, dtype=dtype),
+            k_proj=Linear.create(kk, dim, num_kv_heads * head_dim, use_bias=qkv_bias, dtype=dtype),
+            v_proj=Linear.create(kv, dim, num_kv_heads * head_dim, use_bias=qkv_bias, dtype=dtype),
+            o_proj=Linear.create(ko, num_heads * head_dim, dim, use_bias=False, dtype=dtype),
+            num_heads=num_heads, num_kv_heads=num_kv_heads, head_dim=head_dim,
+            rope=rope, rope_theta=rope_theta, window=window, causal=causal,
+            chunk=chunk,
+        )
+
+    # -- helpers ------------------------------------------------------------
+
+    def _qkv(self, x, context=None, positions=None, kv_positions=None):
+        b, s, _ = x.shape
+        ctx = x if context is None else context
+        q = self.q_proj(x).reshape(b, s, self.num_heads, self.head_dim)
+        k = self.k_proj(ctx).reshape(b, ctx.shape[1], self.num_kv_heads, self.head_dim)
+        v = self.v_proj(ctx).reshape(b, ctx.shape[1], self.num_kv_heads, self.head_dim)
+        if self.rope:
+            if positions is None:
+                positions = jnp.arange(s)[None, :]
+            if kv_positions is None:
+                kv_positions = jnp.arange(ctx.shape[1])[None, :]
+            q = apply_rope(q, positions, theta=self.rope_theta)
+            k = apply_rope(k, kv_positions, theta=self.rope_theta)
+        return q, k, v
+
+    def _attend(self, q, k, v, mask):
+        """q: (b, sq, h, d); k/v: (b, sk, kvh, d); mask: (b, 1, sq, sk) bool."""
+        group = self.num_heads // self.num_kv_heads
+        b, sq, h, d = q.shape
+        sk = k.shape[1]
+        q = q.reshape(b, sq, self.num_kv_heads, group, d)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32)
+        logits = logits / jnp.sqrt(d).astype(jnp.float32)
+        if mask is not None:
+            logits = jnp.where(mask[:, :, None, :, :], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+        return out.reshape(b, sq, h * d)
+
+    def _attend_chunked(self, q, k, v):
+        """Flash-style blockwise attention: O(chunk²) temporaries instead of
+        O(S²).  Online-softmax accumulation over KV blocks, lax.map over Q
+        blocks.  Respects causal + sliding-window masks via block position
+        offsets.  Self-attention full-sequence path only (training/prefill)."""
+        c = self.chunk
+        b, sq, h, d = q.shape
+        sk = k.shape[1]
+        pad_q, pad_k = (-sq) % c, (-sk) % c
+        qpad = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        kpad = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        vpad = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        nq, nk = (sq + pad_q) // c, (sk + pad_k) // c
+        group = self.num_heads // self.num_kv_heads
+        kvh = self.num_kv_heads
+        qb = qpad.reshape(b, nq, c, kvh, group, d).astype(jnp.float32)
+        kb = kpad.reshape(b, nk, c, kvh, d).astype(jnp.float32)
+        vb = vpad.reshape(b, nk, c, kvh, d).astype(jnp.float32)
+        scale = 1.0 / jnp.sqrt(d)
+        kpos_in = jnp.arange(c)
+        qpos_in = jnp.arange(c)
+
+        def q_block(qi):
+            qblk = qb[:, qi]  # (b, c, kvh, g, d)
+
+            def kv_step(carry, ki):
+                m, l, acc = carry
+                kblk, vblk = kb[:, ki], vb[:, ki]
+                logits = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk) * scale
+                qpos = qi * c + qpos_in
+                kpos = ki * c + kpos_in
+                valid = kpos[None, :] < sk
+                if self.causal:
+                    valid = valid & (kpos[None, :] <= qpos[:, None])
+                if self.window > 0:
+                    valid = valid & (kpos[None, :] > qpos[:, None] - self.window)
+                logits = jnp.where(valid[None, None, None, :, :], logits,
+                                   NEG_INF)
+                m_new = jnp.maximum(m, logits.max(-1))
+                p = jnp.exp(logits - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + p.sum(-1)
+                acc_new = (acc * corr[..., None]
+                           + jnp.einsum("bkgqs,bskd->bkgqd", p, vblk))
+                return (m_new, l_new, acc_new), None
+
+            m0 = jnp.full((b, kvh, group, c), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((b, kvh, group, c), jnp.float32)
+            a0 = jnp.zeros((b, kvh, group, c, d), jnp.float32)
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                          jnp.arange(nk))
+            out = acc / jnp.maximum(l[..., None], 1e-30)
+            # (b, kvh, g, c, d) -> (b, c, kvh*g*d)
+            return out.transpose(0, 3, 1, 2, 4).reshape(b, c, h * d)
+
+        blocks = jax.lax.map(q_block, jnp.arange(nq))  # (nq, b, c, h*d)
+        out = blocks.transpose(1, 0, 2, 3).reshape(b, nq * c, h * d)
+        return out[:, :sq].astype(q.dtype)
+
+    def _causal_mask(self, sq, sk, q_offset=0):
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(sk)
+        mask = kpos[None, :] <= qpos[:, None] if self.causal else jnp.ones((sq, sk), bool)
+        if self.window > 0:
+            mask = mask & (kpos[None, :] > qpos[:, None] - self.window)
+        return mask[None, None, :, :]  # (1, 1, sq, sk) -> broadcasts over (b, kvh)
+
+    # -- forward paths ------------------------------------------------------
+
+    def __call__(self, x: jax.Array, *, context: Optional[jax.Array] = None,
+                 positions: Optional[jax.Array] = None) -> jax.Array:
+        """Full-sequence forward (training / prefill without cache)."""
+        q, k, v = self._qkv(x, context=context, positions=positions)
+        if context is None and self.chunk > 0 and x.shape[1] > self.chunk:
+            out = self._attend_chunked(q, k, v)
+            return self.o_proj(out)
+        if context is None:
+            mask = self._causal_mask(x.shape[1], x.shape[1])
+        else:
+            mask = None  # cross-attention: attend to the whole context
+        out = self._attend(q, k, v, mask)
+        return self.o_proj(out)
+
+    def project_kv(self, context: jax.Array):
+        """Precompute cross-attention K/V from an encoder context."""
+        b, t, _ = context.shape
+        k = self.k_proj(context).reshape(b, t, self.num_kv_heads, self.head_dim)
+        v = self.v_proj(context).reshape(b, t, self.num_kv_heads, self.head_dim)
+        return k, v
+
+    def attend_kv(self, x: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+        """Cross-attend ``x`` against precomputed K/V (no mask, no rope)."""
+        b, s, _ = x.shape
+        q = self.q_proj(x).reshape(b, s, self.num_heads, self.head_dim)
+        return self.o_proj(self._attend(q, k, v, None))
+
+    def _is_ring(self, cache: KVCache) -> bool:
+        """Ring-buffer mode: a sliding-window layer whose cache holds exactly
+        ``window`` slots — slot(p) = p % window.  O(window) decode memory
+        regardless of context length (the long_500k path)."""
+        return self.window > 0 and cache.k.shape[1] == self.window
+
+    def prefill(self, x: jax.Array, cache: KVCache) -> tuple[jax.Array, KVCache]:
+        """Process a prompt, fill the cache, return outputs + updated cache."""
+        b, s, _ = x.shape
+        q, k, v = self._qkv(x)
+        if self.chunk > 0 and s > self.chunk:
+            out = self._attend_chunked(q, k, v)
+        else:
+            out = self._attend(q, k, v, self._causal_mask(s, s))
+        k, v = k.astype(cache.k.dtype), v.astype(cache.v.dtype)
+        if self._is_ring(cache):
+            w = self.window
+            keep = min(s, w)
+            slots = (jnp.arange(s - keep, s)) % w
+            new_k = cache.k.at[:, slots].set(k[:, s - keep:])
+            new_v = cache.v.at[:, slots].set(v[:, s - keep:])
+        else:
+            new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k, 0, axis=1)
+            new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v, 0, axis=1)
+        return self.o_proj(out), KVCache(new_k, new_v, jnp.asarray(s, jnp.int32))
+
+    def decode(self, x: jax.Array, cache: KVCache) -> tuple[jax.Array, KVCache]:
+        """One-token decode step. x: (batch, 1, dim)."""
+        b = x.shape[0]
+        pos = cache.length
+        positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+        q, k, v = self._qkv(x, positions=positions, kv_positions=positions)
+        k, v = k.astype(cache.k.dtype), v.astype(cache.v.dtype)
+        if self._is_ring(cache):
+            w = self.window
+            slot = pos % w
+            new_k = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+            new_v = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+            # slot i holds absolute position pos - ((pos - i) mod w); valid
+            # once non-negative.  Window recency holds by construction.
+            i = jnp.arange(w)
+            kpos = pos - jnp.mod(pos - i, w)
+            valid = kpos >= 0
+        else:
+            new_k = jax.lax.dynamic_update_slice(cache.k, k, (0, pos, 0, 0))
+            new_v = jax.lax.dynamic_update_slice(cache.v, v, (0, pos, 0, 0))
+            kpos = jnp.arange(cache.k.shape[1])
+            valid = kpos <= pos
+            if self.window > 0:
+                valid = valid & (kpos > pos - self.window)
+        mask = valid[None, None, None, :]
+        out = self._attend(q, new_k.astype(x.dtype), new_v.astype(x.dtype), mask)
+        return self.o_proj(out), KVCache(new_k, new_v, pos + 1)

@@ -1,0 +1,169 @@
+"""Convolution layers and their factorized CED counterparts.
+
+Weight layouts (chosen to match the paper's description):
+  * ``Conv1D``: ``W ∈ R^{Cin × Cout × S}``; inputs are ``(batch, length, Cin)``.
+  * ``Conv2D``: ``W ∈ R^{Cin × Cout × Kh × Kw}``; inputs ``(batch, H, W, Cin)``.
+
+CED (Convolution Encoder-Decoder) factorizes the rearranged matrix
+``W' ∈ R^{Cin·S × Cout}`` into ``A'B'`` and reshapes back into two convs:
+a spatial conv to ``r`` channels (``A ∈ R^{Cin × r × S}``) followed by a
+pointwise conv (``B ∈ R^{r × Cout × 1}``).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+from repro.nn.module import Module, static_field
+
+
+def _conv1d(x, w_oik, stride, padding):
+    # x: (B, L, Cin); w_oik: (Cout, Cin, S)
+    return jax.lax.conv_general_dilated(
+        x, w_oik, window_strides=(stride,), padding=padding,
+        dimension_numbers=("NWC", "OIW", "NWC"))
+
+
+def _conv2d(x, w_oihw, stride, padding):
+    return jax.lax.conv_general_dilated(
+        x, w_oihw, window_strides=stride, padding=padding,
+        dimension_numbers=("NHWC", "OIHW", "NHWC"))
+
+
+class Conv1D(Module):
+    weight: jax.Array  # (Cin, Cout, S)
+    bias: Optional[jax.Array]
+    stride: int = static_field(default=1)
+    padding: str = static_field(default="SAME")
+
+    @staticmethod
+    def create(key, c_in: int, c_out: int, kernel_size: int, *, stride: int = 1,
+               padding: str = "SAME", use_bias: bool = True,
+               dtype=jnp.float32) -> "Conv1D":
+        w = initializers.he_normal(key, (c_in, c_out, kernel_size), dtype,
+                                   fan_in_axes=(0, 2))
+        b = jnp.zeros((c_out,), dtype) if use_bias else None
+        return Conv1D(weight=w, bias=b, stride=stride, padding=padding)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        w = jnp.transpose(self.weight, (1, 0, 2))  # -> (Cout, Cin, S)
+        y = _conv1d(x, w, self.stride, self.padding)
+        if self.bias is not None:
+            y = y + self.bias
+        return y
+
+
+class Conv2D(Module):
+    weight: jax.Array  # (Cin, Cout, Kh, Kw)
+    bias: Optional[jax.Array]
+    stride: tuple = static_field(default=(1, 1))
+    padding: str = static_field(default="SAME")
+
+    @staticmethod
+    def create(key, c_in: int, c_out: int, kernel_size, *, stride=(1, 1),
+               padding: str = "SAME", use_bias: bool = True,
+               dtype=jnp.float32) -> "Conv2D":
+        kh, kw = kernel_size if isinstance(kernel_size, tuple) else (kernel_size,) * 2
+        w = initializers.he_normal(key, (c_in, c_out, kh, kw), dtype,
+                                   fan_in_axes=(0, 2, 3))
+        b = jnp.zeros((c_out,), dtype) if use_bias else None
+        return Conv2D(weight=w, bias=b, stride=tuple(stride), padding=padding)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        w = jnp.transpose(self.weight, (1, 0, 2, 3))  # -> (Cout, Cin, Kh, Kw)
+        y = _conv2d(x, w, self.stride, self.padding)
+        if self.bias is not None:
+            y = y + self.bias
+        return y
+
+
+class CED1D(Module):
+    """Factorized Conv1D: spatial conv to rank channels + pointwise conv."""
+
+    A: jax.Array  # (Cin, r, S)
+    B: jax.Array  # (r, Cout, 1)
+    bias: Optional[jax.Array]
+    stride: int = static_field(default=1)
+    padding: str = static_field(default="SAME")
+
+    @property
+    def rank(self) -> int:
+        return self.A.shape[1]
+
+    @staticmethod
+    def create(key, c_in: int, c_out: int, kernel_size: int, rank: int, *,
+               stride: int = 1, padding: str = "SAME", use_bias: bool = True,
+               dtype=jnp.float32) -> "CED1D":
+        ka, kb = jax.random.split(key)
+        A = initializers.he_normal(ka, (c_in, rank, kernel_size), dtype,
+                                   fan_in_axes=(0, 2))
+        B = initializers.he_normal(kb, (rank, c_out, 1), dtype, fan_in_axes=(0, 2))
+        b = jnp.zeros((c_out,), dtype) if use_bias else None
+        return CED1D(A=A, B=B, bias=b, stride=stride, padding=padding)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        wa = jnp.transpose(self.A, (1, 0, 2))  # (r, Cin, S)
+        t = _conv1d(x, wa, self.stride, self.padding)
+        wb = jnp.transpose(self.B, (1, 0, 2))  # (Cout, r, 1)
+        y = _conv1d(t, wb, 1, "SAME")
+        if self.bias is not None:
+            y = y + self.bias
+        return y
+
+    def materialize(self) -> Conv1D:
+        """Collapse to a dense Conv1D (pointwise ∘ spatial == one conv)."""
+        c_in, r, s = self.A.shape
+        # W'[Cin*S, Cout] = A'[Cin*S, r] @ B'[r, Cout]; undo the rearrangement.
+        a_mat = jnp.transpose(self.A, (0, 2, 1)).reshape(c_in * s, r)
+        w_mat = a_mat @ self.B[:, :, 0]
+        w = w_mat.reshape(c_in, s, -1).transpose(0, 2, 1)  # (Cin, Cout, S)
+        return Conv1D(weight=w, bias=self.bias, stride=self.stride,
+                      padding=self.padding)
+
+
+class CED2D(Module):
+    """Factorized Conv2D: spatial conv to rank channels + 1x1 conv."""
+
+    A: jax.Array  # (Cin, r, Kh, Kw)
+    B: jax.Array  # (r, Cout, 1, 1)
+    bias: Optional[jax.Array]
+    stride: tuple = static_field(default=(1, 1))
+    padding: str = static_field(default="SAME")
+
+    @property
+    def rank(self) -> int:
+        return self.A.shape[1]
+
+    @staticmethod
+    def create(key, c_in: int, c_out: int, kernel_size, rank: int, *,
+               stride=(1, 1), padding: str = "SAME", use_bias: bool = True,
+               dtype=jnp.float32) -> "CED2D":
+        kh, kw = kernel_size if isinstance(kernel_size, tuple) else (kernel_size,) * 2
+        ka, kb = jax.random.split(key)
+        A = initializers.he_normal(ka, (c_in, rank, kh, kw), dtype,
+                                   fan_in_axes=(0, 2, 3))
+        B = initializers.he_normal(kb, (rank, c_out, 1, 1), dtype,
+                                   fan_in_axes=(0, 2, 3))
+        b = jnp.zeros((c_out,), dtype) if use_bias else None
+        return CED2D(A=A, B=B, bias=b, stride=tuple(stride), padding=padding)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        wa = jnp.transpose(self.A, (1, 0, 2, 3))
+        t = _conv2d(x, wa, self.stride, self.padding)
+        wb = jnp.transpose(self.B, (1, 0, 2, 3))
+        y = _conv2d(t, wb, (1, 1), "SAME")
+        if self.bias is not None:
+            y = y + self.bias
+        return y
+
+    def materialize(self) -> Conv2D:
+        c_in, r, kh, kw = self.A.shape
+        a_mat = jnp.transpose(self.A, (0, 2, 3, 1)).reshape(c_in * kh * kw, r)
+        w_mat = a_mat @ self.B[:, :, 0, 0]
+        w = w_mat.reshape(c_in, kh, kw, -1).transpose(0, 3, 1, 2)
+        return Conv2D(weight=w, bias=self.bias, stride=self.stride,
+                      padding=self.padding)

@@ -1,0 +1,24 @@
+"""Token embedding (optionally tied as the output head)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+from repro.nn.module import Module
+
+
+class Embedding(Module):
+    weight: jax.Array  # (vocab, dim)
+
+    @staticmethod
+    def create(key, vocab_size: int, dim: int, *, dtype=jnp.float32) -> "Embedding":
+        return Embedding(weight=initializers.normal(key, (vocab_size, dim), dtype))
+
+    def __call__(self, tokens: jax.Array) -> jax.Array:
+        return jnp.take(self.weight, tokens, axis=0)
+
+    def attend(self, x: jax.Array) -> jax.Array:
+        """Tied output head: logits = x @ E^T."""
+        return x @ self.weight.T

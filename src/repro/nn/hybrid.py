@@ -1,0 +1,76 @@
+"""Hymba-style hybrid block: parallel attention heads + SSM heads.
+
+Each block runs an attention path and a Mamba-2 SSD path *in parallel* on the
+same (normalized) input; the two outputs are per-path RMS-normalized and
+averaged (the fusion used by Hymba, arXiv:2411.13676).  Most layers use
+sliding-window attention; every ``global_every``-th layer is global.
+
+Simplifications vs. the paper (recorded in DESIGN.md): no meta tokens, no
+cross-layer KV sharing — neither changes the compute/communication shape the
+roofline measures.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.attention import Attention, KVCache
+from repro.nn.module import Module
+from repro.nn.norm import RMSNorm
+from repro.nn.ssm import Mamba2Mixer, SSMState
+
+
+class HybridState(NamedTuple):
+    kv: KVCache
+    ssm: SSMState
+
+
+class HybridMixer(Module):
+    attn: Attention
+    ssm: Mamba2Mixer
+    attn_norm: RMSNorm
+    ssm_norm: RMSNorm
+
+    @staticmethod
+    def create(key, dim: int, num_heads: int, num_kv_heads: int, *,
+               head_dim: Optional[int] = None, window: int = 0,
+               ssm_state: int = 16, ssm_head_dim: int = 64, chunk: int = 0,
+               dtype=jnp.float32) -> "HybridMixer":
+        ka, ks = jax.random.split(key)
+        return HybridMixer(
+            attn=Attention.create(ka, dim, num_heads, num_kv_heads,
+                                  head_dim=head_dim, window=window,
+                                  chunk=chunk, dtype=dtype),
+            ssm=Mamba2Mixer.create(ks, dim, d_state=ssm_state,
+                                   head_dim=ssm_head_dim, dtype=dtype),
+            attn_norm=RMSNorm.create(dim, dtype=dtype),
+            ssm_norm=RMSNorm.create(dim, dtype=dtype),
+        )
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        a = self.attn(x)
+        s = self.ssm(x)
+        return 0.5 * (self.attn_norm(a) + self.ssm_norm(s))
+
+    def prefill(self, x: jax.Array, state: HybridState):
+        a, kv = self.attn.prefill(x, state.kv)
+        # prefill the SSM path with its full forward, capturing the state
+        z, xbc, dt = self.ssm._split(self.ssm.in_proj(x))
+        xbc_c = self.ssm._conv(xbc)
+        xi, B, C = self.ssm._split_xbc(xbc_c)
+        y, ssm_final = self.ssm._ssd(dt=dt, x=xi, B=B, C=C)
+        y = y.reshape(x.shape[0], x.shape[1], self.ssm.d_inner)
+        y = self.ssm.gate_norm(y) * jax.nn.silu(z)
+        s = self.ssm.out_proj(y)
+        conv_tail = xbc[:, -(self.ssm.conv_width - 1):, :]
+        new_state = HybridState(
+            kv=kv, ssm=SSMState(conv=conv_tail, ssm=ssm_final))
+        return 0.5 * (self.attn_norm(a) + self.ssm_norm(s)), new_state
+
+    def decode(self, x: jax.Array, state: HybridState):
+        a, kv = self.attn.decode(x, state.kv)
+        s, ssm = self.ssm.decode(x, state.ssm)
+        return 0.5 * (self.attn_norm(a) + self.ssm_norm(s)), HybridState(kv, ssm)

@@ -1,0 +1,35 @@
+"""Parameter initializers (pure functions of a PRNG key)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def normal(key, shape, dtype=jnp.float32, stddev=0.02):
+    return stddev * jax.random.normal(key, shape, dtype)
+
+
+def lecun_normal(key, shape, dtype=jnp.float32, fan_in_axes=(-2,)):
+    fan_in = int(np.prod([shape[a] for a in fan_in_axes]))
+    return jax.random.normal(key, shape, dtype) / jnp.sqrt(jnp.maximum(fan_in, 1)).astype(dtype)
+
+
+def he_normal(key, shape, dtype=jnp.float32, fan_in_axes=(-2,)):
+    fan_in = int(np.prod([shape[a] for a in fan_in_axes]))
+    return jax.random.normal(key, shape, dtype) * jnp.sqrt(2.0 / max(fan_in, 1)).astype(dtype)
+
+
+def zeros(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+def uniform(key, shape, dtype=jnp.float32, scale=1.0):
+    return jax.random.uniform(key, shape, dtype, -scale, scale)

@@ -1,0 +1,96 @@
+"""Dense and Low-rank (LED) linear layers.
+
+``Linear`` stores ``weight`` of shape ``(in_features, out_features)`` —
+``y = x @ W + b`` — optionally with leading stack axes (layer-stacked weights
+for scan-over-layers, or expert-stacked weights for MoE); ``__call__`` always
+consumes the *last two* axes.
+
+``LED`` (Linear Encoder-Decoder) is the paper's factorized replacement:
+``y = (x @ A) @ B + b`` with ``A: (in, r)`` and ``B: (r, out)``.  When
+``fuse='pallas'`` the forward uses the fused Pallas TPU kernel from
+``repro.kernels`` that keeps the rank-``r`` intermediate in VMEM.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+from repro.nn.module import Module, static_field
+
+
+class Linear(Module):
+    weight: jax.Array  # (..., in_features, out_features)
+    bias: Optional[jax.Array]  # (..., out_features) or None
+
+    @property
+    def in_features(self) -> int:
+        return self.weight.shape[-2]
+
+    @property
+    def out_features(self) -> int:
+        return self.weight.shape[-1]
+
+    @staticmethod
+    def create(key, in_features: int, out_features: int, *, use_bias: bool = False,
+               dtype=jnp.float32, stack_dims: tuple = ()) -> "Linear":
+        wkey, _ = jax.random.split(key)
+        weight = initializers.lecun_normal(
+            wkey, (*stack_dims, in_features, out_features), dtype)
+        bias = jnp.zeros((*stack_dims, out_features), dtype) if use_bias else None
+        return Linear(weight=weight, bias=bias)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        y = x @ self.weight
+        if self.bias is not None:
+            y = y + self.bias
+        return y
+
+
+class LED(Module):
+    """Linear Encoder-Decoder layer: ``y = (x @ A) @ B + bias``."""
+
+    A: jax.Array  # (..., in_features, rank)  -- the "encoder"
+    B: jax.Array  # (..., rank, out_features) -- the "decoder"
+    bias: Optional[jax.Array]
+    fuse: str = static_field(default="auto")  # 'auto' | 'jnp' | 'pallas'
+
+    @property
+    def in_features(self) -> int:
+        return self.A.shape[-2]
+
+    @property
+    def out_features(self) -> int:
+        return self.B.shape[-1]
+
+    @property
+    def rank(self) -> int:
+        return self.A.shape[-1]
+
+    @staticmethod
+    def create(key, in_features: int, out_features: int, rank: int, *,
+               use_bias: bool = False, dtype=jnp.float32,
+               stack_dims: tuple = ()) -> "LED":
+        ka, kb = jax.random.split(key)
+        A = initializers.lecun_normal(ka, (*stack_dims, in_features, rank), dtype)
+        B = initializers.lecun_normal(kb, (*stack_dims, rank, out_features), dtype)
+        bias = jnp.zeros((*stack_dims, out_features), dtype) if use_bias else None
+        return LED(A=A, B=B, bias=bias)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        if self.fuse == "pallas":
+            from repro.kernels.ops import led_matmul_trainable
+
+            y = led_matmul_trainable(x, self.A, self.B)
+        else:
+            y = (x @ self.A) @ self.B
+        if self.bias is not None:
+            y = y + self.bias
+        return y
+
+    def materialize(self) -> Linear:
+        """Collapse back to a dense layer (for testing / export)."""
+        return Linear(weight=self.A @ self.B, bias=self.bias)

@@ -1,0 +1,45 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GeLU (whisper/classic)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import Linear
+from repro.nn.module import Module, static_field
+
+
+class SwiGLU(Module):
+    gate_proj: Linear
+    up_proj: Linear
+    down_proj: Linear
+
+    @staticmethod
+    def create(key, dim: int, hidden: int, *, dtype=jnp.float32,
+               stack_dims: tuple = ()) -> "SwiGLU":
+        kg, ku, kd = jax.random.split(key, 3)
+        return SwiGLU(
+            gate_proj=Linear.create(kg, dim, hidden, dtype=dtype, stack_dims=stack_dims),
+            up_proj=Linear.create(ku, dim, hidden, dtype=dtype, stack_dims=stack_dims),
+            down_proj=Linear.create(kd, hidden, dim, dtype=dtype, stack_dims=stack_dims),
+        )
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.down_proj(jax.nn.silu(self.gate_proj(x)) * self.up_proj(x))
+
+
+class GeluMLP(Module):
+    up_proj: Linear
+    down_proj: Linear
+
+    @staticmethod
+    def create(key, dim: int, hidden: int, *, use_bias: bool = True,
+               dtype=jnp.float32) -> "GeluMLP":
+        ku, kd = jax.random.split(key)
+        return GeluMLP(
+            up_proj=Linear.create(ku, dim, hidden, use_bias=use_bias, dtype=dtype),
+            down_proj=Linear.create(kd, hidden, dim, use_bias=use_bias, dtype=dtype),
+        )
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.down_proj(jax.nn.gelu(self.up_proj(x)))

@@ -1,0 +1,185 @@
+"""Pytree-registered module system (equinox-style, dependency-free).
+
+A ``Module`` is a frozen dataclass automatically registered as a JAX pytree.
+Fields are pytree *children* unless declared with :func:`static_field`, in
+which case they are part of the treedef (hashable aux data).  This gives the
+PyTorch-like "walk the module tree and swap layers" ergonomics that
+Greenformer's ``auto_fact`` needs, while remaining fully jit/pjit/scan
+compatible.
+
+Design notes
+------------
+* Modules are immutable; functional updates go through ``dataclasses.replace``
+  or :func:`update`.
+* ``flatten_with_keys`` is used so sharding rules and ``auto_fact`` filters can
+  pattern-match on dotted parameter paths (e.g. ``"blocks.attn.q_proj.weight"``).
+* Containers (list/tuple/dict) of sub-modules are supported transparently as
+  ordinary pytree nodes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def static_field(**kwargs) -> Any:
+    """A dataclass field stored as static (non-traced) pytree aux data."""
+    metadata = dict(kwargs.pop("metadata", {}) or {})
+    metadata["static"] = True
+    return dataclasses.field(metadata=metadata, **kwargs)
+
+
+def _data_fields(cls) -> list:
+    return [f for f in dataclasses.fields(cls) if not f.metadata.get("static", False)]
+
+
+def _static_fields(cls) -> list:
+    return [f for f in dataclasses.fields(cls) if f.metadata.get("static", False)]
+
+
+class Module:
+    """Base class.  Subclasses are turned into frozen dataclasses + pytrees."""
+
+    def __init_subclass__(cls, **kwargs):
+        super().__init_subclass__(**kwargs)
+        dataclasses.dataclass(frozen=True, repr=False)(cls)
+
+        def flatten_with_keys(obj):
+            children = tuple(
+                (jax.tree_util.GetAttrKey(f.name), getattr(obj, f.name))
+                for f in _data_fields(cls)
+            )
+            aux = tuple(getattr(obj, f.name) for f in _static_fields(cls))
+            return children, aux
+
+        def flatten(obj):
+            children = tuple(getattr(obj, f.name) for f in _data_fields(cls))
+            aux = tuple(getattr(obj, f.name) for f in _static_fields(cls))
+            return children, aux
+
+        def unflatten(aux, children):
+            obj = object.__new__(cls)
+            for f, v in zip(_data_fields(cls), children):
+                object.__setattr__(obj, f.name, v)
+            for f, v in zip(_static_fields(cls), aux):
+                object.__setattr__(obj, f.name, v)
+            return obj
+
+        jax.tree_util.register_pytree_with_keys(
+            cls, flatten_with_keys, unflatten, flatten_func=flatten
+        )
+
+    # -- ergonomics ---------------------------------------------------------
+
+    def replace(self, **changes) -> "Module":
+        return dataclasses.replace(self, **changes)
+
+    def __repr__(self) -> str:  # compact, avoids dumping full arrays
+        parts = []
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, (jnp.ndarray, jax.Array)):
+                parts.append(f"{f.name}={v.dtype}{list(v.shape)}")
+            else:
+                parts.append(f"{f.name}={v!r}")
+        return f"{type(self).__name__}({', '.join(parts)})"
+
+
+# ---------------------------------------------------------------------------
+# Tree surgery: the traversal primitive behind auto_fact and sharding rules.
+# ---------------------------------------------------------------------------
+
+
+def iter_modules(root: Any, path: str = "") -> Iterator[Tuple[str, Module]]:
+    """Depth-first iteration over every ``Module`` in ``root`` with dotted paths."""
+    if isinstance(root, Module):
+        yield path, root
+        for f in _data_fields(type(root)):
+            sub = getattr(root, f.name)
+            child_path = f"{path}.{f.name}" if path else f.name
+            yield from iter_modules(sub, child_path)
+    elif isinstance(root, (list, tuple)):
+        for i, sub in enumerate(root):
+            yield from iter_modules(sub, f"{path}.{i}" if path else str(i))
+    elif isinstance(root, dict):
+        for k, sub in root.items():
+            yield from iter_modules(sub, f"{path}.{k}" if path else str(k))
+
+
+def map_modules(
+    root: Any,
+    fn: Callable[[str, Module], Any],
+    path: str = "",
+) -> Any:
+    """Rebuild a module tree, letting ``fn(path, module)`` substitute nodes.
+
+    ``fn`` is called on every ``Module`` node (pre-order).  If it returns a
+    value that is not the module itself, that value replaces the node and
+    recursion stops there; otherwise recursion continues into children.
+    """
+    if isinstance(root, Module):
+        replacement = fn(path, root)
+        if replacement is not root:
+            return replacement
+        changes = {}
+        for f in _data_fields(type(root)):
+            sub = getattr(root, f.name)
+            child_path = f"{path}.{f.name}" if path else f.name
+            new_sub = map_modules(sub, fn, child_path)
+            if new_sub is not sub:
+                changes[f.name] = new_sub
+        return dataclasses.replace(root, **changes) if changes else root
+    if isinstance(root, (list, tuple)):
+        new = [
+            map_modules(sub, fn, f"{path}.{i}" if path else str(i))
+            for i, sub in enumerate(root)
+        ]
+        if all(a is b for a, b in zip(new, root)):
+            return root
+        return type(root)(new)
+    if isinstance(root, dict):
+        new = {
+            k: map_modules(sub, fn, f"{path}.{k}" if path else str(k))
+            for k, sub in root.items()
+        }
+        if all(new[k] is root[k] for k in root):
+            return root
+        return new
+    return root
+
+
+def named_parameters(root: Any) -> Iterator[Tuple[str, jax.Array]]:
+    """Yield ``(dotted_path, array)`` for every array leaf."""
+    leaves = jax.tree_util.tree_flatten_with_path(root)[0]
+    for key_path, leaf in leaves:
+        if leaf is None:
+            continue
+        name = ".".join(_key_str(k) for k in key_path)
+        yield name, leaf
+
+
+def _key_str(k) -> str:
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return k.name
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    return str(k)
+
+
+def param_count(root: Any) -> int:
+    return sum(
+        leaf.size
+        for leaf in jax.tree_util.tree_leaves(root)
+        if hasattr(leaf, "size")
+    )
+
+
+def tree_slice(root: Any, i) -> Any:
+    """Index the leading axis of every array leaf (for scan-over-layers)."""
+    return jax.tree_util.tree_map(lambda x: x[i], root)

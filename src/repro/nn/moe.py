@@ -1,0 +1,122 @@
+"""Mixture-of-Experts feed-forward with token-choice top-k routing.
+
+Design (TPU-native, GSPMD-friendly):
+  * Routing and dispatch happen **per sequence row** ("groups" in GShard
+    terminology): each row of ``S`` tokens is routed independently with a
+    per-row capacity ``C = ceil(S·k/E · capacity_factor)``.  This bounds the
+    sort to ``S·k`` elements, keeps every shape static, and lets the batch
+    axis stay sharded on ``data`` while the expert axis shards on ``model``
+    (expert parallelism); GSPMD inserts the dispatch all-to-all.
+  * Dispatch/combine use sort + scatter/gather (O(T·k·d) memory), NOT the
+    one-hot einsum (O(T²) FLOPs at large T) — this keeps the roofline honest.
+  * Expert FFNs are weight-stacked SwiGLUs, so ``auto_fact`` factorizes all
+    experts at once (batched SVD over the expert axis).
+  * Shared experts (deepseek/kimi style) are a plain SwiGLU applied to every
+    token, added to the routed output.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import LED, Linear
+from repro.nn.mlp import SwiGLU
+from repro.nn.module import Module, static_field
+
+
+def _expert_matmul(proj, x: jax.Array) -> jax.Array:
+    """x: (b, E, cap, d_in) × expert-stacked Linear/LED -> (b, E, cap, d_out).
+
+    LED experts (Greenformer-factorized) contract through the rank
+    bottleneck — two small einsums instead of one dense one."""
+    if isinstance(proj, LED):
+        t = jnp.einsum("becd,edr->becr", x, proj.A.astype(x.dtype))
+        return jnp.einsum("becr,erf->becf", t, proj.B.astype(x.dtype))
+    return jnp.einsum("becd,edf->becf", x, proj.weight.astype(x.dtype))
+
+
+class MoEOutput(NamedTuple):
+    y: jax.Array
+    aux_loss: jax.Array
+
+
+class MoE(Module):
+    router: Linear  # (dim, n_experts)
+    experts: SwiGLU  # weight-stacked: (..., E, dim, ff)
+    shared: Optional[SwiGLU]
+    n_experts: int = static_field(default=8)
+    top_k: int = static_field(default=2)
+    capacity_factor: float = static_field(default=1.25)
+
+    @staticmethod
+    def create(key, dim: int, ff: int, n_experts: int, top_k: int, *,
+               n_shared: int = 0, capacity_factor: float = 1.25,
+               dtype=jnp.float32) -> "MoE":
+        kr, ke, ks = jax.random.split(key, 3)
+        experts = SwiGLU.create(ke, dim, ff, dtype=dtype, stack_dims=(n_experts,))
+        shared = SwiGLU.create(ks, dim, ff * n_shared, dtype=dtype) if n_shared else None
+        return MoE(
+            router=Linear.create(kr, dim, n_experts, dtype=dtype),
+            experts=experts, shared=shared,
+            n_experts=n_experts, top_k=top_k, capacity_factor=capacity_factor,
+        )
+
+    def _capacity(self, seq_len: int) -> int:
+        cap = int(seq_len * self.top_k * self.capacity_factor / self.n_experts) + 1
+        return min(max(cap, self.top_k), seq_len)
+
+    def __call__(self, x: jax.Array) -> MoEOutput:
+        """x: (batch, seq, dim) -> (batch, seq, dim), aux load-balance loss."""
+        b, s, d = x.shape
+        e, k = self.n_experts, self.top_k
+        cap = self._capacity(s)
+
+        logits = self.router(x.astype(jnp.float32))  # (b, s, e)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, k)  # (b, s, k)
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+        # ---- per-row sort-based dispatch -------------------------------
+        flat_e = top_e.reshape(b, s * k)  # expert id per slot
+        order = jnp.argsort(flat_e, axis=-1)  # (b, s*k)
+        sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+        counts = jax.vmap(lambda ids: jnp.bincount(ids, length=e))(flat_e)  # (b, e)
+        seg_start = jnp.cumsum(counts, axis=-1) - counts  # (b, e)
+        pos = jnp.arange(s * k)[None, :] - jnp.take_along_axis(seg_start, sorted_e, -1)
+        keep = pos < cap
+        dest = jnp.where(keep, sorted_e * cap + pos, e * cap)  # OOB => dropped
+        src_tok = order // k  # token index for each sorted slot
+
+        x_slot = jnp.take_along_axis(
+            x, src_tok[..., None], axis=1, mode="clip")  # (b, s*k, d)
+        buf = jnp.zeros((b, e * cap, d), x.dtype)
+        buf = jax.vmap(lambda bf, dst, xs: bf.at[dst].set(xs, mode="drop"))(
+            buf, dest, x_slot)
+        buf = buf.reshape(b, e, cap, d)
+
+        # ---- expert computation (weights stacked on leading E axis) ----
+        h = _expert_matmul(self.experts.gate_proj, buf)
+        u = _expert_matmul(self.experts.up_proj, buf)
+        y_e = _expert_matmul(self.experts.down_proj, jax.nn.silu(h) * u)
+        y_e = y_e.reshape(b, e * cap, d)
+
+        # ---- combine ----------------------------------------------------
+        y_slot = jnp.take_along_axis(
+            y_e, jnp.minimum(dest, e * cap - 1)[..., None], axis=1)
+        prob_slot = jnp.take_along_axis(top_p.reshape(b, s * k), order, axis=-1)
+        w = jnp.where(keep, prob_slot, 0.0).astype(x.dtype)
+        y = jnp.zeros_like(x)
+        y = jax.vmap(lambda yy, tok, val: yy.at[tok].add(val))(
+            y, src_tok, y_slot * w[..., None])
+
+        if self.shared is not None:
+            y = y + self.shared(x)
+
+        # ---- load-balance aux loss (Switch-style) -----------------------
+        frac_tokens = counts.astype(jnp.float32) / (s * k)  # (b, e)
+        frac_probs = probs.mean(axis=1)  # (b, e)
+        aux = e * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+        return MoEOutput(y=y, aux_loss=aux)

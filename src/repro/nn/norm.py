@@ -1,0 +1,49 @@
+"""Normalization layers."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Module, static_field
+
+
+class RMSNorm(Module):
+    scale: jax.Array
+    eps: float = static_field(default=1e-6)
+
+    @staticmethod
+    def create(dim: int, *, eps: float = 1e-6, dtype=jnp.float32) -> "RMSNorm":
+        return RMSNorm(scale=jnp.ones((dim,), dtype), eps=eps)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        orig_dtype = x.dtype
+        x = x.astype(jnp.float32)
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        x = x * jax.lax.rsqrt(var + self.eps)
+        return (x * self.scale.astype(jnp.float32)).astype(orig_dtype)
+
+
+class LayerNorm(Module):
+    scale: jax.Array
+    bias: Optional[jax.Array]
+    eps: float = static_field(default=1e-5)
+
+    @staticmethod
+    def create(dim: int, *, eps: float = 1e-5, use_bias: bool = True,
+               dtype=jnp.float32) -> "LayerNorm":
+        bias = jnp.zeros((dim,), dtype) if use_bias else None
+        return LayerNorm(scale=jnp.ones((dim,), dtype), bias=bias, eps=eps)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        orig_dtype = x.dtype
+        x = x.astype(jnp.float32)
+        mean = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        x = (x - mean) * jax.lax.rsqrt(var + self.eps)
+        x = x * self.scale.astype(jnp.float32)
+        if self.bias is not None:
+            x = x + self.bias.astype(jnp.float32)
+        return x.astype(orig_dtype)

@@ -1,0 +1,232 @@
+"""Mamba-2 (SSD — state-space duality) mixer.
+
+Implements the chunked SSD algorithm (Dao & Gu, 2024) in pure JAX:
+  * training / prefill: chunk-parallel form — quadratic attention *within*
+    chunks, linear state recurrence *across* chunks (a ``jax.lax`` scan-free
+    cumulative formulation over the chunk axis via associative decay products).
+  * decode: O(1) recurrent state update per token.
+
+Shapes follow the reference implementation: ``d_inner = expand · d_model``,
+``n_heads = d_inner / head_dim``, scalar decay ``A`` per head, ``B``/``C``
+shared across heads per group (``n_groups`` groups), state size ``N``.
+
+The in/out projections are ``Linear`` modules — the factorization target for
+Greenformer on this architecture (the SSD scan itself is weight-free apart
+from the scalar decays; see DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import Linear
+from repro.nn.module import Module, static_field
+from repro.nn.norm import RMSNorm
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array  # (batch, conv_width - 1, conv_dim) rolling conv buffer
+    ssm: jax.Array  # (batch, heads, head_dim, state) recurrent state
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} a[..., k] (−inf j>i)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum_{j+1..i} for i >= j
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+class Mamba2Mixer(Module):
+    in_proj: Linear  # dim -> 2*d_inner + 2*groups*state + heads
+    out_proj: Linear  # d_inner -> dim
+    conv_w: jax.Array  # (conv_width, conv_dim) depthwise causal conv
+    conv_b: jax.Array  # (conv_dim,)
+    A_log: jax.Array  # (heads,)
+    D: jax.Array  # (heads,)
+    dt_bias: jax.Array  # (heads,)
+    gate_norm: RMSNorm
+    d_inner: int = static_field(default=0)
+    n_heads: int = static_field(default=0)
+    head_dim: int = static_field(default=64)
+    n_groups: int = static_field(default=1)
+    d_state: int = static_field(default=128)
+    conv_width: int = static_field(default=4)
+    chunk: int = static_field(default=128)
+
+    @staticmethod
+    def create(key, dim: int, *, expand: int = 2, head_dim: int = 64,
+               d_state: int = 128, n_groups: int = 1, conv_width: int = 4,
+               chunk: int = 128, dtype=jnp.float32) -> "Mamba2Mixer":
+        d_inner = expand * dim
+        n_heads = d_inner // head_dim
+        conv_dim = d_inner + 2 * n_groups * d_state
+        d_in_proj = 2 * d_inner + 2 * n_groups * d_state + n_heads
+        ki, ko, kc, ka = jax.random.split(key, 4)
+        return Mamba2Mixer(
+            in_proj=Linear.create(ki, dim, d_in_proj, dtype=dtype),
+            out_proj=Linear.create(ko, d_inner, dim, dtype=dtype),
+            conv_w=0.1 * jax.random.normal(kc, (conv_width, conv_dim), dtype),
+            conv_b=jnp.zeros((conv_dim,), dtype),
+            A_log=jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(dtype)),
+            D=jnp.ones((n_heads,), dtype),
+            dt_bias=jnp.log(jnp.expm1(jnp.full((n_heads,), 0.01, dtype))),
+            gate_norm=RMSNorm.create(d_inner, dtype=dtype),
+            d_inner=d_inner, n_heads=n_heads, head_dim=head_dim,
+            n_groups=n_groups, d_state=d_state, conv_width=conv_width,
+            chunk=chunk,
+        )
+
+    # -- projection plumbing -------------------------------------------------
+
+    def _split(self, zxbcdt):
+        di, g, n, h = self.d_inner, self.n_groups, self.d_state, self.n_heads
+        z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+        return z, xbc, dt
+
+    def _conv(self, xbc):
+        """Causal depthwise conv along seq. xbc: (b, l, conv_dim)."""
+        w = self.conv_w.astype(xbc.dtype)
+        pad = self.conv_width - 1
+        xp = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
+        out = sum(
+            xp[:, i:i + xbc.shape[1], :] * w[i] for i in range(self.conv_width)
+        )
+        return jax.nn.silu(out + self.conv_b.astype(xbc.dtype))
+
+    def _split_xbc(self, xbc):
+        di, g, n, h, p = (self.d_inner, self.n_groups, self.d_state,
+                          self.n_heads, self.head_dim)
+        x, B, C = jnp.split(xbc, [di, di + g * n], axis=-1)
+        b, l = x.shape[:2]
+        x = x.reshape(b, l, h, p)
+        B = B.reshape(b, l, g, n)
+        C = C.reshape(b, l, g, n)
+        return x, B, C
+
+    # -- chunked SSD (training / prefill) ------------------------------------
+
+    def _ssd(self, x, dt, B, C):
+        """Chunked SSD. x: (b,l,h,p); dt: (b,l,h); B/C: (b,l,g,n).
+
+        Returns y: (b,l,h,p) and the final state (b,h,p,n).
+        """
+        b, l_orig, h, p = x.shape
+        g, n = self.n_groups, self.d_state
+        q = min(self.chunk, l_orig) if l_orig % self.chunk else self.chunk
+        pad = (-l_orig) % q
+        if pad:
+            # pad with "no-op" steps: x=0 (no contribution) and raw dt=-30 so
+            # softplus(dt)≈0 => decay exp(0)=1 => the final state is exact.
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)),
+                         constant_values=-30.0)
+            B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l = l_orig + pad
+        nc = l // q
+        A = -jnp.exp(self.A_log.astype(jnp.float32))  # (h,)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + self.dt_bias)  # (b,l,h)
+        a = dt * A  # (b,l,h) log-decay per step
+        rep = h // g
+
+        # reshape into chunks
+        xc = x.reshape(b, nc, q, h, p)
+        ac = a.reshape(b, nc, q, h)
+        dtc = dt.reshape(b, nc, q, h)
+        Bc = B.reshape(b, nc, q, g, n)
+        Cc = C.reshape(b, nc, q, g, n)
+
+        # --- intra-chunk (quadratic) ---
+        L = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))  # (b,nc,h,q,q)
+        scores = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)  # (b,nc,g,q,q)
+        scores = jnp.repeat(scores, rep, axis=2)  # (b,nc,h,q,q)
+        M = scores * L * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+        y_intra = jnp.einsum("bchqk,bckhp->bcqhp", M.astype(x.dtype), xc)
+
+        # --- chunk states ---
+        a_cum = jnp.cumsum(ac, axis=2)  # (b,nc,q,h)
+        a_tot = a_cum[:, :, -1, :]  # (b,nc,h)
+        decay_to_end = jnp.exp(a_tot[:, :, None, :] - a_cum)  # (b,nc,q,h)
+        # S_c = sum_k decay_to_end * dt * B_k ⊗ x_k  -> (b,nc,h,p,n)
+        wB = (Bc[:, :, :, :, None, :]  # (b,nc,q,g,1,n)
+              .repeat(rep, axis=4).reshape(b, nc, q, h, n))
+        states = jnp.einsum(
+            "bcqh,bcqhp,bcqhn->bchpn",
+            (decay_to_end * dtc).astype(x.dtype), xc, wB.astype(x.dtype))
+
+        # --- inter-chunk recurrence over chunk states (scan) ---
+        def step(carry, inp):
+            s_prev = carry
+            s_c, atot = inp
+            s_new = s_prev * jnp.exp(atot)[:, :, None, None].astype(s_prev.dtype) + s_c
+            return s_new, s_prev  # emit state *entering* the chunk
+
+        s0 = jnp.zeros((b, h, p, n), x.dtype)
+        final, s_in = jax.lax.scan(
+            step, s0, (states.transpose(1, 0, 2, 3, 4), a_tot.transpose(1, 0, 2)))
+        s_in = s_in.transpose(1, 0, 2, 3, 4)  # (b,nc,h,p,n)
+
+        # --- inter-chunk contribution ---
+        decay_from_start = jnp.exp(a_cum)  # (b,nc,q,h)
+        wC = (Cc[:, :, :, :, None, :].repeat(rep, axis=4).reshape(b, nc, q, h, n))
+        y_inter = jnp.einsum(
+            "bcqhn,bchpn,bcqh->bcqhp", wC.astype(x.dtype), s_in,
+            decay_from_start.astype(x.dtype))
+
+        y = (y_intra + y_inter).reshape(b, l, h, p)
+        y = y + x * self.D.astype(x.dtype)[None, None, :, None]
+        return y[:, :l_orig], final
+
+    # -- public paths ---------------------------------------------------------
+
+    def __call__(self, u: jax.Array) -> jax.Array:
+        y, _ = self.forward_with_state(u)
+        return y
+
+    def forward_with_state(self, u: jax.Array):
+        z, xbc, dt = self._split(self.in_proj(u))
+        xbc = self._conv(xbc)
+        x, B, C = self._split_xbc(xbc)
+        y, state = self._ssd(x, dt, B, C)
+        y = y.reshape(u.shape[0], u.shape[1], self.d_inner)
+        y = self.gate_norm(y) * jax.nn.silu(z)
+        return self.out_proj(y), state
+
+    def init_state(self, batch: int, dtype=jnp.float32) -> SSMState:
+        conv_dim = self.d_inner + 2 * self.n_groups * self.d_state
+        return SSMState(
+            conv=jnp.zeros((batch, self.conv_width - 1, conv_dim), dtype),
+            ssm=jnp.zeros((batch, self.n_heads, self.head_dim, self.d_state),
+                          dtype),
+        )
+
+    def decode(self, u: jax.Array, state: SSMState):
+        """One-token recurrent step. u: (b, 1, dim)."""
+        b = u.shape[0]
+        z, xbc, dt = self._split(self.in_proj(u))
+        # rolling conv buffer
+        window = jnp.concatenate([state.conv, xbc], axis=1)  # (b, w, conv_dim)
+        w = self.conv_w.astype(u.dtype)
+        conv_out = jnp.einsum("bwc,wc->bc", window, w) + self.conv_b.astype(u.dtype)
+        xbc_t = jax.nn.silu(conv_out)[:, None, :]
+        x, B, C = self._split_xbc(xbc_t)  # x: (b,1,h,p)
+        A = -jnp.exp(self.A_log.astype(jnp.float32))
+        dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + self.dt_bias)  # (b,h)
+        decay = jnp.exp(dt_t * A)  # (b,h)
+        rep = self.n_heads // self.n_groups
+        Bh = jnp.repeat(B[:, 0], rep, axis=1)  # (b,h,n)
+        Ch = jnp.repeat(C[:, 0], rep, axis=1)
+        dBx = jnp.einsum("bh,bhn,bhp->bhpn", dt_t.astype(u.dtype),
+                         Bh.astype(u.dtype), x[:, 0])
+        ssm = state.ssm * decay[:, :, None, None].astype(state.ssm.dtype) + dBx
+        y = jnp.einsum("bhpn,bhn->bhp", ssm, Ch.astype(u.dtype))
+        y = y + x[:, 0] * self.D.astype(u.dtype)[None, :, None]
+        y = y.reshape(b, 1, self.d_inner)
+        y = self.gate_norm(y) * jax.nn.silu(z)
+        new_state = SSMState(conv=window[:, 1:], ssm=ssm)
+        return self.out_proj(y), new_state

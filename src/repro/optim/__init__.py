@@ -1,0 +1,7 @@
+from repro.optim.adamw import AdamW, AdamWState, SGD
+from repro.optim.schedule import constant, inverse_sqrt, linear_warmup_cosine
+from repro.optim.clip import all_finite, clip_by_global_norm, global_norm
+
+__all__ = ["AdamW", "AdamWState", "SGD", "constant", "inverse_sqrt",
+           "linear_warmup_cosine", "all_finite", "clip_by_global_norm",
+           "global_norm"]

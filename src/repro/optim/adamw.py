@@ -1,0 +1,114 @@
+"""AdamW with fp32 moments + optional fp32 master weights (no optax dep)."""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: object  # pytree, fp32
+    v: object  # pytree, fp32
+    master: object  # pytree fp32 master copy, or None
+
+
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+def _lr_at(lr: Schedule, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+class AdamW:
+    def __init__(self, lr: Schedule, *, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 master_fp32: bool = True):
+        self.lr, self.b1, self.b2, self.eps = lr, b1, b2, eps
+        self.weight_decay = weight_decay
+        self.master_fp32 = master_fp32
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree_util.tree_map(
+            lambda p: None if p is None else jnp.zeros(p.shape, jnp.float32),
+            params)
+        master = (jax.tree_util.tree_map(
+            lambda p: None if p is None else p.astype(jnp.float32), params)
+            if self.master_fp32 else None)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                          v=jax.tree_util.tree_map(lambda x: x, zeros),
+                          master=master)
+
+    def update(self, grads, state: AdamWState, params):
+        """Returns (new_params, new_state)."""
+        step = state.step + 1
+        lr = _lr_at(self.lr, step)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        ref = state.master if self.master_fp32 else params
+
+        def upd(g, m, v, p, p_ref):
+            if g is None or p is None:
+                return None, None, None, None
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            mhat = m / bc1
+            vhat = v / bc2
+            base = p_ref.astype(jnp.float32)
+            new = base - lr * (mhat / (jnp.sqrt(vhat) + self.eps)
+                               + self.weight_decay * base)
+            return new.astype(p.dtype), m, v, new
+
+        flat_p, treedef = jax.tree_util.tree_flatten(
+            params, is_leaf=lambda x: x is None)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        flat_r = (treedef.flatten_up_to(ref) if self.master_fp32 else flat_p)
+
+        out = [upd(g, m, v, p, r) for g, m, v, p, r in
+               zip(flat_g, flat_m, flat_v, flat_p, flat_r)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        new_master = (treedef.unflatten([o[3] for o in out])
+                      if self.master_fp32 else None)
+        return new_p, AdamWState(step=step, m=new_m, v=new_v,
+                                 master=new_master)
+
+
+class SGD:
+    """Plain SGD with momentum (baseline optimizer for the paper benches)."""
+
+    def __init__(self, lr: Schedule, *, momentum: float = 0.9):
+        self.lr, self.momentum = lr, momentum
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree_util.tree_map(
+            lambda p: None if p is None else jnp.zeros(p.shape, jnp.float32),
+            params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=None,
+                          master=None)
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        lr = _lr_at(self.lr, step)
+
+        def upd(g, m, p):
+            if g is None or p is None:
+                return None, None
+            m = self.momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+        flat_p, treedef = jax.tree_util.tree_flatten(
+            params, is_leaf=lambda x: x is None)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        out = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        return new_p, AdamWState(step=step, m=new_m, v=None, master=None)

@@ -1,0 +1,26 @@
+"""Gradient utilities: global-norm clipping and finiteness guards."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [l for l in jax.tree_util.tree_leaves(tree) if l is not None]
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-6))
+    return jax.tree_util.tree_map(
+        lambda l: None if l is None else (l * scale).astype(l.dtype), tree,
+        is_leaf=lambda x: x is None), norm
+
+
+def all_finite(tree) -> jax.Array:
+    leaves = [l for l in jax.tree_util.tree_leaves(tree) if l is not None]
+    return jnp.all(jnp.stack(
+        [jnp.all(jnp.isfinite(l.astype(jnp.float32))) for l in leaves]))

@@ -1,0 +1,30 @@
+"""Learning-rate schedules (pure ``step -> lr`` callables)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup_cosine(peak: float, warmup: int, total: int,
+                         floor: float = 0.0):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn
+
+
+def inverse_sqrt(peak: float, warmup: int):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        return peak * jnp.minimum(step / max(warmup, 1),
+                                  jnp.sqrt(warmup / jnp.maximum(step, 1.0)))
+
+    return fn

@@ -1,0 +1,3 @@
+from repro.serve.engine import Engine, generate
+
+__all__ = ["Engine", "generate"]

@@ -1,0 +1,5 @@
+from repro.train.loss import accuracy, cross_entropy
+from repro.train.step import TrainState, make_eval_step, make_train_step
+
+__all__ = ["accuracy", "cross_entropy", "TrainState", "make_eval_step",
+           "make_train_step"]

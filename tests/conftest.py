@@ -1,0 +1,14 @@
+import jax
+import pytest
+from hypothesis import settings
+
+# CPU-only container: keep hypothesis fast and quiet.
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

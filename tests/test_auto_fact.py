@@ -1,0 +1,199 @@
+"""auto_fact: the paper's API — gating, filtering, conv path, dynamic rank."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro import auto_fact, defactorize, nn
+from repro.core import r_max, resolve_rank, should_factorize
+from repro.core.auto_fact import FactReport
+
+
+class ConvWrap(nn.Module):
+    c1: nn.Conv1D
+    c2: nn.Conv2D
+
+
+@pytest.fixture
+def attn(key):
+    return nn.Attention.create(key, 64, 4, 2)
+
+
+# ---- rank policy -----------------------------------------------------------
+
+
+@given(m=st.integers(2, 512), n=st.integers(2, 512))
+def test_r_max_break_even(m, n):
+    r = r_max(m, n)
+    # cost model: dense = m*n, factorized = r*(m+n); equal at r_max
+    assert abs(r * (m + n) - m * n) < 1e-6
+
+
+@given(m=st.integers(2, 256), n=st.integers(2, 256),
+       ratio=st.floats(0.01, 1.0))
+def test_resolve_ratio_bounds(m, n, ratio):
+    r = resolve_rank(ratio, m, n)
+    assert 1 <= r <= r_max(m, n) + 1
+
+
+@given(m=st.integers(2, 256), n=st.integers(2, 256), r=st.integers(1, 300))
+def test_gate_iff_cheaper(m, n, r):
+    assert should_factorize(r, m, n) == (r * (m + n) < m * n)
+
+
+def test_resolve_rank_rejects_bad():
+    with pytest.raises(ValueError):
+        resolve_rank(0, 4, 4)
+    with pytest.raises(ValueError):
+        resolve_rank(1.5, 4, 4)
+    with pytest.raises(TypeError):
+        resolve_rank(True, 4, 4)
+
+
+# ---- auto_fact on linears ---------------------------------------------------
+
+
+def test_replaces_all_linears(attn):
+    fact, rep = auto_fact(attn, rank=8, return_report=True)
+    assert isinstance(rep, FactReport)
+    assert len(rep.entries) == 4 and not rep.skipped
+    for proj in (fact.q_proj, fact.k_proj, fact.v_proj, fact.o_proj):
+        assert isinstance(proj, nn.LED) and proj.rank == 8
+
+
+def test_r_max_gate_skips(attn):
+    # rank 32 >= r_max(64,64)=32 → q/o skipped; r_max(64,32)=21.3 → k/v skipped
+    fact, rep = auto_fact(attn, rank=32, return_report=True)
+    assert len(rep.entries) == 0 and len(rep.skipped) == 4
+    assert isinstance(fact.q_proj, nn.Linear)
+
+
+def test_svd_factorization_close_at_high_rank(attn, key):
+    fact = auto_fact(attn, rank=20, solver="svd")
+    x = jax.random.normal(key, (2, 6, 64))
+    # rank 20 of 64x64 random: lossy but structured comparison still sane
+    dense, fact_out = attn(x), fact(x)
+    assert fact_out.shape == dense.shape
+    assert bool(jnp.isfinite(fact_out).all())
+
+
+def test_param_reduction_matches_formula(attn):
+    fact, rep = auto_fact(attn, rank=8, return_report=True)
+    # q/o: 64x64 -> 8*(64+64); k/v: 64x32 -> 8*(64+32)
+    assert rep.params_before == 2 * 64 * 64 + 2 * 64 * 32
+    assert rep.params_after == 2 * 8 * 128 + 2 * 8 * 96
+
+
+def test_submodule_filter(attn):
+    fact, rep = auto_fact(attn, rank=8, submodules=["q_proj", "k_proj"],
+                          return_report=True)
+    assert {e[0] for e in rep.entries} == {"q_proj", "k_proj"}
+    assert isinstance(fact.v_proj, nn.Linear)
+
+
+def test_exclude_filter(attn):
+    fact, rep = auto_fact(attn, rank=8, exclude=["o_proj"],
+                          return_report=True)
+    assert "o_proj" not in {e[0] for e in rep.entries}
+    assert isinstance(fact.o_proj, nn.Linear)
+
+
+def test_bias_preserved(key):
+    lin = nn.Linear.create(key, 16, 8, use_bias=True)
+
+    class W(nn.Module):
+        l: nn.Linear
+
+    fact = auto_fact(W(l=lin), rank=2)
+    assert fact.l.bias is not None
+    np.testing.assert_allclose(np.asarray(fact.l.bias),
+                               np.asarray(lin.bias))
+
+
+def test_defactorize_roundtrip(attn, key):
+    fact = auto_fact(attn, rank=8, solver="svd")
+    dense = defactorize(fact)
+    assert isinstance(dense.q_proj, nn.Linear)
+    x = jax.random.normal(key, (1, 4, 64))
+    np.testing.assert_allclose(np.asarray(dense(x)), np.asarray(fact(x)),
+                               atol=1e-4)
+
+
+def test_stacked_expert_factorization(key):
+    moe = nn.MoE.create(key, 32, 64, n_experts=4, top_k=2)
+    fact, rep = auto_fact(moe, rank=8, exclude=["router"],
+                          return_report=True)
+    assert isinstance(fact.experts.gate_proj, nn.LED)
+    assert fact.experts.gate_proj.A.shape == (4, 32, 8)  # per-expert factors
+    assert isinstance(fact.router, nn.Linear)  # excluded
+    x = jax.random.normal(key, (2, 8, 32))
+    out = fact(x)
+    assert out.y.shape == (2, 8, 32) and bool(jnp.isfinite(out.y).all())
+
+
+def test_led_forward_equals_materialized(key):
+    led = nn.LED.create(key, 24, 40, 6, use_bias=True)
+    x = jax.random.normal(key, (3, 5, 24))
+    np.testing.assert_allclose(np.asarray(led(x)),
+                               np.asarray(led.materialize()(x)), atol=1e-4)
+
+
+# ---- conv path ---------------------------------------------------------------
+
+
+def test_conv_factorization_exact_at_full_rank(key):
+    wrap = ConvWrap(c1=nn.Conv1D.create(key, 8, 12, 3),
+                    c2=nn.Conv2D.create(key, 4, 6, 3))
+    # full effective rank: min(Cin*S, Cout) = 12 and 6 — but the r_max gate
+    # requires r < r_max, so pick rank above r_max to check skip instead
+    fact, rep = auto_fact(wrap, rank=0.99, solver="svd", return_report=True)
+    x1 = jax.random.normal(key, (2, 10, 8))
+    x2 = jax.random.normal(key, (2, 6, 6, 4))
+    assert isinstance(fact.c1, nn.CED1D) and isinstance(fact.c2, nn.CED2D)
+    # materialize(CED) must equal applying the two convs
+    np.testing.assert_allclose(np.asarray(fact.c1.materialize()(x1)),
+                               np.asarray(fact.c1(x1)), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fact.c2.materialize()(x2)),
+                               np.asarray(fact.c2(x2)), atol=1e-4)
+
+
+def test_conv_svd_reconstruction_quality(key):
+    conv = nn.Conv1D.create(key, 8, 12, 3)
+
+    class W(nn.Module):
+        c: nn.Conv1D
+
+    x = jax.random.normal(key, (2, 10, 8))
+    errs = []
+    for r in (2, 6):
+        fact = auto_fact(W(c=conv), rank=r, solver="svd")
+        errs.append(float(jnp.abs(fact.c(x) - conv(x)).max()))
+    assert errs[1] < errs[0]  # higher rank → better approximation
+
+
+def test_factorize_conv_flag(key):
+    wrap = ConvWrap(c1=nn.Conv1D.create(key, 8, 12, 3),
+                    c2=nn.Conv2D.create(key, 4, 6, 3))
+    fact = auto_fact(wrap, rank=2, factorize_conv=False)
+    assert isinstance(fact.c1, nn.Conv1D) and isinstance(fact.c2, nn.Conv2D)
+
+
+# ---- whole-model -------------------------------------------------------------
+
+
+def test_auto_fact_whole_model_runs(key):
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("paper-tiny").reduced()
+    model = build_model(key, cfg)
+    fact, rep = auto_fact(model, rank=0.5, solver="svd",
+                          exclude=["embed", "lm_head"], return_report=True)
+    assert rep.entries, "expected some layers factorized"
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+    logits, _ = fact(toks)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())

@@ -1,0 +1,88 @@
+"""Regression-lock the assigned architecture specs (they must match the
+assignment table exactly) and the shape applicability rules."""
+
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, applicable_shapes, get_config
+
+# (layers, d_model, heads, kv_heads, d_ff, vocab) per the assignment
+SPECS = {
+    "qwen2.5-3b": ("dense", 36, 2048, 16, 2, 11008, 151936),
+    "yi-9b": ("dense", 48, 4096, 32, 4, 11008, 64000),
+    "granite-34b": ("dense", 88, 6144, 48, 1, 24576, 49152),
+    "glm4-9b": ("dense", 40, 4096, 32, 2, 13696, 151552),
+    "mamba2-2.7b": ("ssm", 64, 2560, 0, 0, 0, 50280),
+    "whisper-medium": ("encdec", 24, 1024, 16, 16, 4096, 51865),
+    "kimi-k2-1t-a32b": ("moe", 61, 7168, 64, 8, 2048, 163840),
+    "deepseek-moe-16b": ("moe", 28, 2048, 16, 16, 1408, 102400),
+    "chameleon-34b": ("vlm", 48, 8192, 64, 8, 22016, 65536),
+    "hymba-1.5b": ("hybrid", 32, 1600, 25, 5, 5504, 32001),
+}
+
+
+@pytest.mark.parametrize("arch", list(SPECS))
+def test_assigned_spec_exact(arch):
+    fam, L, d, h, kv, ff, v = SPECS[arch]
+    cfg = get_config(arch)
+    assert cfg.family == fam
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff and cfg.vocab == v
+
+
+def test_arch_registry_complete():
+    assert sorted(ARCH_IDS) == sorted(SPECS)
+
+
+def test_moe_details():
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert (kimi.n_experts, kimi.top_k, kimi.n_shared) == (384, 8, 1)
+    ds = get_config("deepseek-moe-16b")
+    assert (ds.n_experts, ds.top_k, ds.n_shared) == (64, 6, 2)
+
+
+def test_ssm_details():
+    mamba = get_config("mamba2-2.7b")
+    assert mamba.ssm_state == 128 and mamba.supports_long_context
+    hymba = get_config("hymba-1.5b")
+    assert hymba.ssm_state == 16 and hymba.window == 1024
+    assert hymba.supports_long_context
+
+
+def test_qwen_has_qkv_bias():
+    assert get_config("qwen2.5-3b").qkv_bias
+    assert not get_config("yi-9b").qkv_bias
+
+
+def test_shape_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_long_context_applicability():
+    """long_500k only for sub-quadratic archs (the documented skip rule)."""
+    for arch in ARCH_IDS:
+        shapes = applicable_shapes(get_config(arch))
+        if arch in ("mamba2-2.7b", "hymba-1.5b"):
+            assert "long_500k" in shapes
+        else:
+            assert "long_500k" not in shapes
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(shapes)
+
+
+def test_total_cell_count():
+    """8 archs × 3 shapes + 2 archs × 4 shapes = 32 applicable cells."""
+    n = sum(len(applicable_shapes(get_config(a))) for a in ARCH_IDS)
+    assert n == 32
+
+
+def test_reduced_configs_are_tiny():
+    for arch in ARCH_IDS:
+        r = get_config(arch).reduced()
+        assert r.n_layers == 2 and r.d_model == 64 and r.vocab == 256
+        assert r.dtype == "float32"

@@ -1,0 +1,253 @@
+"""Layer semantics: attention (GQA/rings), SSM scan-vs-recurrence, MoE."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import nn
+
+
+# ---- attention ---------------------------------------------------------------
+
+
+def naive_mha(q, k, v, causal=True):
+    """O(s²) reference attention, full heads."""
+    b, s, h, d = q.shape
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(d)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(b, s, h * d)
+
+
+def test_gqa_matches_naive_when_mha(key):
+    attn = nn.Attention.create(key, 32, 4, 4, rope=False)
+    x = jax.random.normal(key, (2, 6, 32))
+    q = attn.q_proj(x).reshape(2, 6, 4, 8)
+    k = attn.k_proj(x).reshape(2, 6, 4, 8)
+    v = attn.v_proj(x).reshape(2, 6, 4, 8)
+    ref = attn.o_proj(naive_mha(q, k, v))
+    np.testing.assert_allclose(np.asarray(attn(x)), np.asarray(ref),
+                               atol=1e-5)
+
+
+def test_gqa_repeats_kv_heads(key):
+    """GQA == MHA with tiled K/V heads."""
+    gqa = nn.Attention.create(key, 32, 4, 2, rope=False)
+    x = jax.random.normal(key, (2, 5, 32))
+    q = gqa.q_proj(x).reshape(2, 5, 4, 8)
+    k = gqa.k_proj(x).reshape(2, 5, 2, 8)
+    v = gqa.v_proj(x).reshape(2, 5, 2, 8)
+    k_t = jnp.repeat(k, 2, axis=2)
+    v_t = jnp.repeat(v, 2, axis=2)
+    ref = gqa.o_proj(naive_mha(q, k_t, v_t))
+    np.testing.assert_allclose(np.asarray(gqa(x)), np.asarray(ref),
+                               atol=1e-5)
+
+
+def test_rope_relative_property(key):
+    """RoPE scores depend only on relative distance."""
+    from repro.nn.rotary import apply_rope
+
+    q = jax.random.normal(key, (1, 1, 2, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 2, 16))
+    def score(qpos, kpos):
+        qr = apply_rope(q, jnp.array([[qpos]]))
+        kr = apply_rope(k, jnp.array([[kpos]]))
+        return jnp.einsum("bqhd,bkhd->bhqk", qr, kr)
+
+    np.testing.assert_allclose(np.asarray(score(5, 3)),
+                               np.asarray(score(105, 103)), atol=1e-3)
+
+
+def test_sliding_window_mask(key):
+    attn = nn.Attention.create(key, 16, 2, 2, window=2, rope=False)
+    x = jax.random.normal(key, (1, 6, 16))
+    # position 5 must ignore positions <= 3: perturbing x[0] can't change y[5]
+    y1 = attn(x)
+    x2 = x.at[0, 0].add(100.0)
+    y2 = attn(x2)
+    np.testing.assert_allclose(np.asarray(y1[0, 5]), np.asarray(y2[0, 5]),
+                               atol=1e-4)
+    assert float(jnp.abs(y1[0, 1] - y2[0, 1]).max()) > 1e-3  # in-window
+
+
+def test_prefill_decode_matches_full(key):
+    attn = nn.Attention.create(key, 32, 4, 2)
+    x = jax.random.normal(key, (2, 9, 32))
+    full = attn(x)
+    cache = nn.KVCache.zeros(2, 16, 2, 8, dtype=jnp.float32)
+    pre, cache = attn.prefill(x[:, :6], cache)
+    np.testing.assert_allclose(np.asarray(pre), np.asarray(full[:, :6]),
+                               atol=1e-5)
+    for t in range(6, 9):
+        y, cache = attn.decode(x[:, t:t + 1], cache)
+        np.testing.assert_allclose(np.asarray(y[:, 0]),
+                                   np.asarray(full[:, t]), atol=1e-5)
+
+
+def test_ring_buffer_decode_matches_full(key):
+    """SWA with an O(window) ring cache must equal full SWA attention."""
+    w = 4
+    attn = nn.Attention.create(key, 32, 4, 2, window=w)
+    x = jax.random.normal(key, (2, 12, 32))
+    full = attn(x)
+    cache = nn.KVCache.zeros(2, w, 2, 8, dtype=jnp.float32)  # ring: slots == w
+    pre, cache = attn.prefill(x[:, :6], cache)
+    np.testing.assert_allclose(np.asarray(pre), np.asarray(full[:, :6]),
+                               atol=1e-5)
+    for t in range(6, 12):
+        y, cache = attn.decode(x[:, t:t + 1], cache)
+        np.testing.assert_allclose(np.asarray(y[:, 0]),
+                                   np.asarray(full[:, t]), atol=1e-5,
+                                   err_msg=f"t={t}")
+
+
+def test_ring_prefill_shorter_than_window(key):
+    w = 8
+    attn = nn.Attention.create(key, 16, 2, 2, window=w)
+    x = jax.random.normal(key, (1, 10, 16))
+    full = attn(x)
+    cache = nn.KVCache.zeros(1, w, 2, 8, dtype=jnp.float32)
+    pre, cache = attn.prefill(x[:, :3], cache)  # 3 < window
+    for t in range(3, 10):
+        y, cache = attn.decode(x[:, t:t + 1], cache)
+        np.testing.assert_allclose(np.asarray(y[:, 0]),
+                                   np.asarray(full[:, t]), atol=1e-5)
+
+
+def test_cross_attention_paths_agree(key):
+    attn = nn.Attention.create(key, 32, 4, 4, rope=False, causal=False)
+    x = jax.random.normal(key, (2, 5, 32))
+    ctx = jax.random.normal(jax.random.fold_in(key, 2), (2, 7, 32))
+    direct = attn(x, context=ctx)
+    k, v = attn.project_kv(ctx)
+    via_kv = attn.attend_kv(x, k, v)
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(via_kv),
+                               atol=1e-5)
+
+
+# ---- SSM -----------------------------------------------------------------------
+
+
+def test_ssd_chunked_equals_recurrent(key):
+    ssm = nn.Mamba2Mixer.create(key, 32, head_dim=16, d_state=8, chunk=4)
+    x = 0.1 * jax.random.normal(key, (2, 16, 32))
+    y_full = ssm(x)
+    st = ssm.init_state(2)
+    ys = []
+    for t in range(16):
+        yt, st = ssm.decode(x[:, t:t + 1], st)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.concatenate(ys, 1)), atol=1e-4)
+
+
+def test_ssd_chunk_size_invariance(key):
+    ssm4 = nn.Mamba2Mixer.create(key, 32, head_dim=16, d_state=8, chunk=4)
+    ssm8 = ssm4.replace(chunk=8)
+    x = 0.1 * jax.random.normal(key, (1, 16, 32))
+    np.testing.assert_allclose(np.asarray(ssm4(x)), np.asarray(ssm8(x)),
+                               atol=1e-4)
+
+
+def test_ssd_state_matches_sequential(key):
+    ssm = nn.Mamba2Mixer.create(key, 16, head_dim=8, d_state=4, chunk=4)
+    x = 0.1 * jax.random.normal(key, (1, 8, 16))
+    _, final = ssm.forward_with_state(x)
+    st = ssm.init_state(1)
+    for t in range(8):
+        _, st = ssm.decode(x[:, t:t + 1], st)
+    np.testing.assert_allclose(np.asarray(final), np.asarray(st.ssm),
+                               atol=1e-5)
+
+
+# ---- MoE ------------------------------------------------------------------------
+
+
+def test_moe_no_drop_equals_dense_mixture(key):
+    """With huge capacity, MoE output == prob-weighted expert outputs."""
+    moe = nn.MoE.create(key, 16, 32, n_experts=4, top_k=2,
+                        capacity_factor=16.0)
+    x = jax.random.normal(key, (2, 6, 16))
+    out = moe(x)
+
+    logits = moe.router(x)
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_e = jax.lax.top_k(probs, 2)
+    top_p = top_p / top_p.sum(-1, keepdims=True)
+    # dense reference: run every expert on every token
+    g = jnp.einsum("bsd,edf->besf", x, moe.experts.gate_proj.weight)
+    u = jnp.einsum("bsd,edf->besf", x, moe.experts.up_proj.weight)
+    y_all = jnp.einsum("besf,efd->besd", jax.nn.silu(g) * u,
+                       moe.experts.down_proj.weight)
+    ref = jnp.zeros_like(x)
+    for slot in range(2):
+        w = top_p[..., slot][..., None]
+        e = top_e[..., slot]
+        # gather the chosen expert's output per (b, s)
+        ref = ref + w * jnp.take_along_axis(
+            y_all.transpose(0, 2, 1, 3), e[..., None, None], axis=2)[:, :, 0]
+    np.testing.assert_allclose(np.asarray(out.y), np.asarray(ref), atol=1e-4)
+
+
+def test_moe_capacity_drops_tokens(key):
+    moe = nn.MoE.create(key, 8, 16, n_experts=2, top_k=1,
+                        capacity_factor=0.25)
+    x = jax.random.normal(key, (1, 16, 8))
+    out = moe(x)  # with cap ~2, most tokens dropped → many zero rows
+    norms = jnp.linalg.norm(out.y[0], axis=-1)
+    assert int((norms < 1e-6).sum()) > 0
+
+
+def test_moe_aux_loss_balanced_is_one(key):
+    """Perfectly uniform routing gives aux ≈ 1 (Switch normalization)."""
+    moe = nn.MoE.create(key, 8, 16, n_experts=4, top_k=4)
+    x = jax.random.normal(key, (4, 32, 8))
+    out = moe(x)
+    assert 0.9 < float(out.aux_loss) < 1.3
+
+
+def test_moe_shared_expert_always_applies(key):
+    moe = nn.MoE.create(key, 8, 16, n_experts=2, top_k=1, n_shared=1,
+                        capacity_factor=0.01)  # routed path ~all dropped
+    x = jax.random.normal(key, (1, 8, 8))
+    out = moe(x)
+    shared_only = moe.shared(x)
+    # with cap≈1 most outputs are just the shared expert
+    diff = jnp.abs(out.y - shared_only).max(axis=-1)
+    assert float(jnp.median(diff)) < 1.0
+
+
+# ---- chunked (flash-style) attention ------------------------------------------
+
+
+def test_chunked_attention_matches_dense(key):
+    for causal, window in [(True, 0), (True, 5), (False, 0)]:
+        dense = nn.Attention.create(key, 32, 4, 2, causal=causal,
+                                    window=window)
+        chunked = dense.replace(chunk=4)
+        x = jax.random.normal(key, (2, 19, 32))  # non-divisible length
+        np.testing.assert_allclose(np.asarray(dense(x)),
+                                   np.asarray(chunked(x)), atol=1e-5,
+                                   err_msg=f"causal={causal} window={window}")
+
+
+def test_chunked_prefill_matches_dense(key):
+    dense = nn.Attention.create(key, 32, 4, 2)
+    chunked = dense.replace(chunk=4)
+    cache = nn.KVCache.zeros(2, 24, 2, 8, dtype=jnp.float32)
+    x = jax.random.normal(key, (2, 16, 32))
+    pd, cd = dense.prefill(x, cache)
+    pc, cc = chunked.prefill(x, cache)
+    np.testing.assert_allclose(np.asarray(pd), np.asarray(pc), atol=1e-5)
+    assert bool(jnp.array_equal(cd.k, cc.k))
+
+
+def test_chunked_attention_differentiable(key):
+    attn = nn.Attention.create(key, 16, 2, 2).replace(chunk=4)
+    x = jax.random.normal(key, (1, 10, 16))
+    g = jax.grad(lambda m: float(0) + jnp.sum(m(x) ** 2).astype(jnp.float32))(attn)
+    assert bool(jnp.isfinite(g.q_proj.weight).all())

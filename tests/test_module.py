@@ -1,0 +1,111 @@
+"""Module system: pytree registration, traversal, surgery."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import nn
+from repro.nn.module import (iter_modules, map_modules, named_parameters,
+                             param_count, tree_slice)
+
+
+class Leafy(nn.Module):
+    w: jax.Array
+    n: int = nn.static_field(default=3)
+
+
+class Nested(nn.Module):
+    lin: nn.Linear
+    inner: Leafy
+    items: list
+
+
+def make_nested(key):
+    return Nested(
+        lin=nn.Linear.create(key, 4, 8, use_bias=True),
+        inner=Leafy(w=jnp.ones((2, 2))),
+        items=[Leafy(w=jnp.zeros((1,))), nn.Linear.create(key, 3, 3)],
+    )
+
+
+def test_pytree_roundtrip(key):
+    m = make_nested(key)
+    leaves, treedef = jax.tree_util.tree_flatten(m)
+    m2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(m2, Nested)
+    assert m2.inner.n == 3
+    assert jnp.array_equal(m2.lin.weight, m.lin.weight)
+
+
+def test_static_fields_are_aux(key):
+    m = Leafy(w=jnp.ones((2,)), n=7)
+    mapped = jax.tree_util.tree_map(lambda x: x * 2, m)
+    assert mapped.n == 7
+    assert jnp.array_equal(mapped.w, 2 * jnp.ones((2,)))
+
+
+def test_jit_through_module(key):
+    lin = nn.Linear.create(key, 4, 4)
+
+    @jax.jit
+    def f(m, x):
+        return m(x)
+
+    x = jnp.ones((2, 4))
+    assert jnp.allclose(f(lin, x), lin(x))
+
+
+def test_iter_modules_paths(key):
+    m = make_nested(key)
+    paths = [p for p, _ in iter_modules(m)]
+    assert "" in paths and "lin" in paths and "inner" in paths
+    assert "items.0" in paths and "items.1" in paths
+
+
+def test_map_modules_replacement(key):
+    m = make_nested(key)
+    led = nn.LED.create(key, 4, 8, 2)
+
+    def swap(path, node):
+        if isinstance(node, nn.Linear) and path == "lin":
+            return led
+        return node
+
+    m2 = map_modules(m, swap)
+    assert isinstance(m2.lin, nn.LED)
+    assert isinstance(m2.items[1], nn.Linear)  # untouched
+    assert m.lin is not m2.lin and m.inner is m2.inner  # minimal copying
+
+
+def test_named_parameters_paths(key):
+    m = make_nested(key)
+    names = dict(named_parameters(m))
+    assert "lin.weight" in names and "lin.bias" in names
+    assert "items.0.w" in names
+
+
+def test_param_count(key):
+    m = nn.Linear.create(key, 4, 8, use_bias=True)
+    assert param_count(m) == 4 * 8 + 8
+
+
+def test_tree_slice(key):
+    stacked = jax.vmap(lambda k: nn.Linear.create(k, 4, 4))(
+        jax.random.split(key, 5))
+    assert stacked.weight.shape == (5, 4, 4)
+    one = tree_slice(stacked, 2)
+    assert one.weight.shape == (4, 4)
+
+
+def test_frozen_immutability(key):
+    m = Leafy(w=jnp.ones((2,)))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        m.w = jnp.zeros((2,))
+
+
+def test_replace(key):
+    m = Leafy(w=jnp.ones((2,)), n=1)
+    m2 = m.replace(n=9)
+    assert m2.n == 9 and m.n == 1

@@ -1,0 +1,111 @@
+"""Sharding rules: Megatron TP + EP + LED boundary specs + FSDP fallbacks."""
+
+from types import SimpleNamespace
+
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import batch_spec, spec_for_param
+
+
+def mesh(shape_dict):
+    return SimpleNamespace(shape=shape_dict)
+
+
+POD = mesh({"data": 16, "model": 16})
+MULTI = mesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_column_parallel_linear():
+    assert spec_for_param("blocks.attn.q_proj.weight", (36, 2048, 2048),
+                          POD) == P(None, None, "model")
+    assert spec_for_param("blocks.mlp.up_proj.weight", (48, 4096, 11008),
+                          POD) == P(None, None, "model")
+
+
+def test_row_parallel_linear():
+    assert spec_for_param("blocks.attn.o_proj.weight", (36, 2048, 2048),
+                          POD) == P(None, "model", None)
+    assert spec_for_param("blocks.mlp.down_proj.weight", (48, 11008, 4096),
+                          POD) == P(None, "model", None)
+
+
+def test_vocab_parallel_embedding_and_head():
+    assert spec_for_param("embed.weight", (151936, 2048), POD) == \
+        P("model", None)
+    assert spec_for_param("lm_head.weight", (2048, 151936), POD) == \
+        P(None, "model")
+
+
+def test_column_bias_sharded_row_bias_replicated():
+    assert spec_for_param("blocks.attn.q_proj.bias", (36, 2048), POD) == \
+        P(None, "model")
+    assert spec_for_param("blocks.mlp.down_proj.bias", (36, 4096), POD) == \
+        P(None, None)
+
+
+def test_led_factor_boundary_sharding():
+    # column-parallel layer: A replicated, B out-sharded
+    assert spec_for_param("blocks.attn.q_proj.A", (36, 2048, 128), POD) == \
+        P(None, None, None)
+    assert spec_for_param("blocks.attn.q_proj.B", (36, 128, 2048), POD) == \
+        P(None, None, "model")
+    # row-parallel layer: A in-sharded, B replicated
+    assert spec_for_param("blocks.attn.o_proj.A", (36, 2048, 128), POD) == \
+        P(None, "model", None)
+    assert spec_for_param("blocks.attn.o_proj.B", (36, 128, 2048), POD) == \
+        P(None, None, None)
+
+
+def test_expert_parallel():
+    # (L, E, in, out): expert axis on "model"
+    assert spec_for_param("blocks.mlp.experts.gate_proj.weight",
+                          (61, 384, 7168, 2048), POD) == \
+        P(None, "model", None, None)
+    # factorized experts keep EP
+    assert spec_for_param("blocks.mlp.experts.up_proj.A",
+                          (61, 384, 7168, 128), POD) == \
+        P(None, "model", None, None)
+
+
+def test_router_and_norms_replicated():
+    assert spec_for_param("blocks.mlp.router.weight", (61, 7168, 384),
+                          POD) == P(None, None, None)
+    assert spec_for_param("blocks.attn_norm.scale", (36, 2048), POD) == \
+        P(None, None)
+
+
+def test_divisibility_fallback():
+    # hymba vocab 32001 is not divisible by 16 → replicate that dim
+    assert spec_for_param("lm_head.weight", (1600, 32001), POD) == \
+        P(None, None)
+    assert spec_for_param("embed.weight", (32001, 1600), POD) == \
+        P(None, None)
+
+
+def test_fsdp_adds_data_axis():
+    spec = spec_for_param("blocks.mlp.experts.gate_proj.weight",
+                          (61, 384, 7168, 2048), POD, fsdp=True)
+    assert spec == P(None, "model", "data", None)
+    # small params stay unsharded on data
+    spec_small = spec_for_param("blocks.attn_norm.scale", (36, 2048), POD,
+                                fsdp=True)
+    assert spec_small == P(None, None)
+
+
+def test_fsdp_multipod_uses_both_dp_axes():
+    spec = spec_for_param("blocks.mlp.down_proj.weight",
+                          (48, 11008, 4096), MULTI, fsdp=True)
+    assert spec == P(None, "model", ("pod", "data"))
+
+
+def test_batch_spec():
+    assert batch_spec(POD) == P("data")
+    assert batch_spec(MULTI) == P(("pod", "data"))
+
+
+def test_mamba_projections():
+    assert spec_for_param("blocks.mixer.in_proj.weight", (64, 2560, 10368),
+                          POD) == P(None, None, "model")
+    assert spec_for_param("blocks.mixer.out_proj.weight", (64, 5120, 2560),
+                          POD) == P(None, "model", None)
+    assert spec_for_param("blocks.mixer.A_log", (64, 80), POD) == P(None, None)

@@ -1,0 +1,95 @@
+"""Factorization solvers: exactness, optimality, constraints (w/ hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import get_solver, random_solver, snmf_solver, svd_solver
+
+
+@given(m=st.integers(4, 48), n=st.integers(4, 48))
+def test_svd_full_rank_exact(m, n):
+    w = jax.random.normal(jax.random.PRNGKey(m * 100 + n), (m, n))
+    a, b = svd_solver(w, min(m, n))
+    np.testing.assert_allclose(np.asarray(a @ b), np.asarray(w), atol=1e-4)
+
+
+@given(m=st.integers(8, 40), n=st.integers(8, 40),
+       r=st.integers(1, 7))
+def test_svd_truncation_is_optimal(m, n, r):
+    """Eckart–Young: rank-r SVD error equals the tail singular values."""
+    w = jax.random.normal(jax.random.PRNGKey(m + 7 * n + 13 * r), (m, n))
+    a, b = svd_solver(w, r)
+    err = float(jnp.linalg.norm(w - a @ b))
+    s = jnp.linalg.svd(w, compute_uv=False)
+    opt = float(jnp.sqrt(jnp.sum(s[r:] ** 2)))
+    assert err <= opt * 1.001 + 1e-4
+
+
+def test_svd_factor_shapes_and_dtype():
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 16), jnp.bfloat16)
+    a, b = svd_solver(w, 4)
+    assert a.shape == (32, 4) and b.shape == (4, 16)
+    assert a.dtype == jnp.bfloat16 and b.dtype == jnp.bfloat16
+
+
+def test_svd_batched_equals_loop():
+    ws = jax.random.normal(jax.random.PRNGKey(1), (5, 12, 10))
+    a, b = svd_solver(ws, 3)
+    assert a.shape == (5, 12, 3) and b.shape == (5, 3, 10)
+    for i in range(5):
+        ai, bi = svd_solver(ws[i], 3)
+        np.testing.assert_allclose(np.asarray(a[i] @ b[i]),
+                                   np.asarray(ai @ bi), atol=1e-4)
+
+
+def test_snmf_nonnegativity_and_approximation():
+    w = jax.random.normal(jax.random.PRNGKey(2), (40, 30))
+    a, b = snmf_solver(w, 20, num_iter=60)
+    assert float(b.min()) >= 0.0
+    rel = float(jnp.linalg.norm(w - a @ b) / jnp.linalg.norm(w))
+    assert rel < 0.6  # semi-NMF at rank 20/30 should capture most energy
+
+
+def test_snmf_more_iters_not_worse():
+    w = jax.random.normal(jax.random.PRNGKey(3), (24, 24))
+    errs = []
+    for it in (1, 10, 50):
+        a, b = snmf_solver(w, 12, num_iter=it)
+        errs.append(float(jnp.linalg.norm(w - a @ b)))
+    assert errs[2] <= errs[0] + 1e-3
+
+
+def test_snmf_rank_monotone():
+    w = jax.random.normal(jax.random.PRNGKey(4), (30, 20))
+    e = []
+    for r in (2, 8, 16):
+        a, b = snmf_solver(w, r, num_iter=40)
+        e.append(float(jnp.linalg.norm(w - a @ b)))
+    assert e[0] > e[1] > e[2]
+
+
+def test_random_solver_shapes_and_scale():
+    w = jax.random.normal(jax.random.PRNGKey(5), (64, 64))
+    a, b = random_solver(w, 16, key=jax.random.PRNGKey(6))
+    assert a.shape == (64, 16) and b.shape == (16, 64)
+    # variance-preserving init: output std of x@A@B near std of x@W_fresh
+    x = jax.random.normal(jax.random.PRNGKey(7), (128, 64))
+    y = x @ a @ b
+    assert 0.3 < float(y.std()) < 3.0
+
+
+def test_random_solver_does_not_approximate():
+    """Per the paper: random is for by-design only (ignores W)."""
+    w = jnp.eye(16)
+    a, b = random_solver(w, 8, key=jax.random.PRNGKey(8))
+    assert float(jnp.linalg.norm(w - a @ b)) > 1.0
+
+
+def test_get_solver_registry():
+    assert get_solver("svd") is svd_solver
+    with pytest.raises(ValueError):
+        get_solver("nope")

@@ -1,9 +1,26 @@
-"""Batched serving with a factorized model (paper use case 2, serving side).
+"""Continuous-batching serving with a factorized model (paper use case 2,
+serving side).
 
-    PYTHONPATH=src python examples/serve_lm.py --batch 8 --gen 32 --fact-rank 0.5
+    PYTHONPATH=src python examples/serve_lm.py --reduced --batch 4 \
+        --n-requests 16 --fact-rank 0.5
 
-Wraps the production serve driver: dense vs SVD-factorized tokens/s plus
-greedy-token agreement between the two.
+Wraps the production serve driver (``repro.launch.serve``): a Poisson trace
+of variable-length prompts is replayed through ``ContinuousEngine`` —
+requests join recyclable decode slots mid-flight under one jitted
+prefill/decode pair — for the dense model and its SVD-factorized copy.
+Prints tokens/s, p50/p95 per-request latency, and greedy-token agreement
+between the two.
+
+Programmatic use::
+
+    from repro.serve import ContinuousEngine
+    eng = ContinuousEngine(model, cfg, batch=8, max_len=256,
+                           max_prompt_len=64)
+    eng.submit(prompt_ids, max_new_tokens=32)                  # greedy
+    eng.submit(other_ids, max_new_tokens=16, temperature=0.8,
+               stop_ids=(eos_id,))
+    for completion in eng.run():
+        print(completion.uid, completion.finish_reason, completion.tokens)
 """
 
 from repro.launch.serve import main as serve_main

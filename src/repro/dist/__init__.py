@@ -1,0 +1,7 @@
+from repro.dist.sharding import (activation_mesh, batch_spec, cache_shardings,
+                                 constrain_acts, data_sharding,
+                                 model_shardings, spec_for_param)
+
+__all__ = ["activation_mesh", "batch_spec", "cache_shardings",
+           "constrain_acts", "data_sharding", "model_shardings",
+           "spec_for_param"]

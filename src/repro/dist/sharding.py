@@ -1,0 +1,187 @@
+"""Sharding rules: Megatron tensor parallelism + expert parallelism + LED
+factor boundary specs + ZeRO/FSDP fallbacks.
+
+``spec_for_param`` maps a dotted parameter path + shape to a
+``PartitionSpec`` on a ``{data[, pod], model}`` mesh:
+
+* column-parallel projections (q/k/v, up/gate, mamba in_proj, lm_head)
+  shard their OUTPUT dim on "model"; their biases shard with the output;
+* row-parallel projections (o_proj, down_proj, mamba out_proj) shard their
+  INPUT dim on "model"; their biases are replicated (added post-reduce);
+* LED factors shard at the low-rank boundary: a column-parallel layer keeps
+  ``A`` replicated and shards ``B``'s output dim, a row-parallel layer
+  shards ``A``'s input dim and keeps ``B`` replicated — the rank-r
+  intermediate is never partitioned;
+* stacked experts shard the expert axis on "model" (expert parallelism);
+* the embedding table is vocab-parallel;
+* any dim that does not divide its mesh axes is replicated instead
+  (e.g. hymba's vocab 32001 on a 16-way TP mesh);
+* ``fsdp=True`` additionally shards the first eligible remaining dim of
+  LARGE params over the data axes (ZeRO-3 style).
+
+``constrain_acts`` is a no-op outside an ``activation_mesh`` context, so
+models call it unconditionally and single-device tests/benches never touch
+device state.
+"""
+
+from __future__ import annotations
+
+import math
+from contextlib import contextmanager
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Minimum element count before FSDP bothers sharding a param over data.
+FSDP_MIN_SIZE = 1 << 20
+
+_COLUMN = {"q_proj", "k_proj", "v_proj", "up_proj", "gate_proj", "in_proj",
+           "lm_head"}
+_ROW = {"o_proj", "down_proj", "out_proj"}
+
+
+def _data_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _data_entry(axes: Sequence[str]):
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+def batch_spec(mesh) -> P:
+    """Batch-dim spec over every data-parallel mesh axis."""
+    return P(_data_entry(_data_axes(mesh)))
+
+
+def spec_for_param(path: str, shape: Tuple[int, ...], mesh,
+                   fsdp: bool = False) -> P:
+    """PartitionSpec for one parameter (see module docstring for rules)."""
+    tp = mesh.shape.get("model", 1)
+    data_axes = _data_axes(mesh)
+    dp = math.prod(mesh.shape[a] for a in data_axes) if data_axes else 1
+    nd = len(shape)
+    spec: list = [None] * nd
+    parts = path.strip(".").split(".")
+    leaf = parts[-1]
+    owner = parts[-2] if len(parts) > 1 else ""
+
+    if ".experts." in f".{path}." and nd >= 3:
+        e_ax = nd - 3  # (..., E, in, out) / (..., E, in, r)
+        if tp > 1 and shape[e_ax] % tp == 0:
+            spec[e_ax] = "model"
+    elif owner == "embed" and leaf == "weight":
+        if tp > 1 and shape[0] % tp == 0:  # vocab-parallel table
+            spec[0] = "model"
+    elif owner in _COLUMN:
+        if leaf in ("weight", "B", "bias") and tp > 1 and shape[-1] % tp == 0:
+            spec[-1] = "model"  # output dim; A stays replicated
+    elif owner in _ROW:
+        if leaf in ("weight", "A") and nd >= 2 and tp > 1 \
+                and shape[-2] % tp == 0:
+            spec[-2] = "model"  # input dim; bias/B stay replicated
+    # everything else (norms, routers, ssm params, pos embeddings): replicated
+
+    if fsdp and dp > 1 and math.prod(shape) >= FSDP_MIN_SIZE:
+        for i in range(nd):
+            if spec[i] is None and shape[i] % dp == 0:
+                spec[i] = _data_entry(data_axes)
+                break
+    return P(*spec)
+
+
+def model_shardings(model, mesh, *, fsdp: bool = False):
+    """NamedSharding tree mirroring ``model`` (arrays or SDS stand-ins)."""
+
+    def _path_str(key_path) -> str:
+        out = []
+        for k in key_path:
+            if hasattr(k, "name"):
+                out.append(str(k.name))
+            elif hasattr(k, "key"):
+                out.append(str(k.key))
+            elif hasattr(k, "idx"):
+                out.append(str(k.idx))
+            else:
+                out.append(str(k).strip(".[]'\""))
+        return ".".join(out)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: NamedSharding(
+            mesh, spec_for_param(_path_str(kp), leaf.shape, mesh, fsdp=fsdp)),
+        model)
+
+
+def data_sharding(mesh, shape: Tuple[int, ...]) -> NamedSharding:
+    """Shard dim 0 (batch) over the data axes; replicate the rest."""
+    data_axes = _data_axes(mesh)
+    dp = math.prod(mesh.shape[a] for a in data_axes) if data_axes else 1
+    spec: list = [None] * len(shape)
+    if shape and dp > 1 and shape[0] % dp == 0:
+        spec[0] = _data_entry(data_axes)
+    return NamedSharding(mesh, P(*spec))
+
+
+def cache_shardings(cache, mesh):
+    """Decode/prefill cache shardings: batch over data, heads over model.
+
+    KV lanes are (layers, batch, slots, kv_heads, head_dim); SSM/conv states
+    are (layers, batch, ...).  Any non-divisible dim is replicated."""
+    tp = mesh.shape.get("model", 1)
+    data_axes = _data_axes(mesh)
+    dp = math.prod(mesh.shape[a] for a in data_axes) if data_axes else 1
+
+    def spec(leaf):
+        shape = leaf.shape
+        s: list = [None] * len(shape)
+        if len(shape) >= 2 and dp > 1 and shape[1] % dp == 0:
+            s[1] = _data_entry(data_axes)
+        if len(shape) >= 4 and tp > 1 and shape[-2] % tp == 0:
+            s[-2] = "model"
+        return NamedSharding(mesh, P(*s))
+
+    return jax.tree_util.tree_map(spec, cache)
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints
+# ---------------------------------------------------------------------------
+
+_ACTIVE: Optional[tuple] = None  # (mesh, seq_parallel) inside activation_mesh
+
+
+@contextmanager
+def activation_mesh(mesh, seq_parallel: bool = False):
+    """Enable activation sharding constraints for traces under this scope."""
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = (mesh, seq_parallel)
+    try:
+        yield mesh
+    finally:
+        _ACTIVE = prev
+
+
+def constrain_acts(x: jax.Array) -> jax.Array:
+    """Constrain (batch, seq, d_model) activations between blocks.
+
+    Batch shards over the data axes; with sequence parallelism the seq dim
+    additionally shards over "model".  Outside an :func:`activation_mesh`
+    scope this is the identity (returns ``x`` itself)."""
+    if _ACTIVE is None:
+        return x
+    mesh, seq_parallel = _ACTIVE
+    data_axes = _data_axes(mesh)
+    dp = math.prod(mesh.shape[a] for a in data_axes) if data_axes else 1
+    tp = mesh.shape.get("model", 1)
+    spec: list = [None] * x.ndim
+    if x.ndim >= 1 and dp > 1 and x.shape[0] % dp == 0:
+        spec[0] = _data_entry(data_axes)
+    if seq_parallel and x.ndim >= 2 and tp > 1 and x.shape[1] % tp == 0:
+        spec[1] = "model"
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+__all__ = ["batch_spec", "spec_for_param", "model_shardings", "data_sharding",
+           "cache_shardings", "activation_mesh", "constrain_acts",
+           "FSDP_MIN_SIZE"]

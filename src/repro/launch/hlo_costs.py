@@ -298,10 +298,12 @@ def analyze(hlo: str) -> Costs:
                     c.bytes += _op_bytes(op, comp)
                 continue
             if op.kind in ("call", "conditional", "async-start"):
+                # boundary is free: the callee's own ops account for their
+                # traffic (e.g. a called slice-fusion reads one layer of a
+                # loop-invariant stack, not the whole operand)
                 for m in _OPERAND_RE.finditer(op.attrs):
                     if m.group(1) in comps:
                         c.add(comp_cost(m.group(1)))
-                c.bytes += _op_bytes(op, comp)
                 continue
             base = op.kind.replace("-start", "").replace("-done", "")
             if base in _COLLECTIVES:

@@ -1,51 +1,45 @@
-"""Serving driver: batched prefill + decode with a (optionally factorized)
-model.
+"""Serving driver: continuous batching with a (optionally factorized) model.
 
     PYTHONPATH=src python -m repro.launch.serve --arch paper-tiny \
-        --batch 8 --prompt-len 64 --gen 32 [--fact-rank 0.5 --solver svd]
+        --batch 8 --max-len 128 --n-requests 32 [--fact-rank 0.5 --solver svd]
 
-Demonstrates the paper's post-training-factorization use case end-to-end:
-the dense model is factorized with SVD *after* "training" (here: at init),
-then served; tokens/s for dense vs factorized are printed side by side.
+Replays a Poisson arrival trace of variable-length prompts through the
+continuous-batching engine (``repro.serve.ContinuousEngine``): requests are
+admitted into recyclable slots mid-flight under one jitted prefill + one
+jitted decode step.  Demonstrates the paper's post-training-factorization
+use case end-to-end — the dense model is factorized with SVD *after*
+"training" (here: at init), then served; tokens/s and p50/p95 per-request
+latency for dense vs factorized are printed side by side, plus greedy-token
+agreement between the two.
 """
 
 from __future__ import annotations
 
 import argparse
 import sys
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import auto_fact
 from repro.models import build_model
-from repro.serve import Engine
-
-
-def bench_engine(model, cfg, batch, prompt_len, gen, max_len) -> tuple:
-    eng = Engine(model, cfg, batch=batch, max_len=max_len,
-                 cache_dtype=jnp.float32)
-    toks = jax.random.randint(jax.random.PRNGKey(0), (batch, prompt_len),
-                              0, cfg.vocab)
-    out = eng.greedy(toks, gen)  # warmup + compile
-    eng.reset()
-    t0 = time.time()
-    out = eng.greedy(toks, gen)
-    jax.block_until_ready(out)
-    dt = time.time() - t0
-    return out, batch * gen / dt
+from repro.serve import bench_trace, format_stats, greedy_agreement, make_trace
 
 
 def main(argv=None) -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="paper-tiny")
-    p.add_argument("--batch", type=int, default=8)
-    p.add_argument("--prompt-len", type=int, default=64)
-    p.add_argument("--gen", type=int, default=32)
+    p.add_argument("--batch", type=int, default=8,
+                   help="decode slots (requests in flight)")
+    p.add_argument("--max-len", type=int, default=128)
+    p.add_argument("--max-prompt-len", type=int, default=64)
+    p.add_argument("--n-requests", type=int, default=32)
+    p.add_argument("--load", type=float, default=0.5,
+                   help="expected request arrivals per decode step")
+    p.add_argument("--max-new", type=int, default=32)
     p.add_argument("--fact-rank", type=float, default=0.0)
     p.add_argument("--solver", default="svd")
+    p.add_argument("--seed", type=int, default=0)
     p.add_argument("--reduced", action="store_true")
     args = p.parse_args(argv)
 
@@ -53,22 +47,24 @@ def main(argv=None) -> int:
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(jax.random.PRNGKey(0), cfg)
-    max_len = args.prompt_len + args.gen
+    trace = make_trace(args.n_requests, seed=args.seed, load=args.load,
+                       min_prompt=4, max_prompt=args.max_prompt_len,
+                       min_new=4, max_new=args.max_new, vocab=cfg.vocab)
 
-    out, tps = bench_engine(model, cfg, args.batch, args.prompt_len,
-                            args.gen, max_len)
-    print(f"dense      : {tps:9.1f} tok/s   sample: {out[0, :8].tolist()}")
+    dims = dict(batch=args.batch, max_len=args.max_len,
+                max_prompt_len=args.max_prompt_len)
+    dense_done, stats = bench_trace(model, cfg, trace, **dims)
+    print(format_stats("dense", stats))
 
     if args.fact_rank:
         fact, report = auto_fact(model, args.fact_rank, solver=args.solver,
                                  key=jax.random.PRNGKey(1),
                                  return_report=True)
         print(report.summary())
-        fout, ftps = bench_engine(fact, cfg, args.batch, args.prompt_len,
-                                  args.gen, max_len)
-        agree = float(jnp.mean((out == fout).astype(jnp.float32)))
-        print(f"factorized : {ftps:9.1f} tok/s   sample: "
-              f"{fout[0, :8].tolist()}  (token agreement {agree:.1%})")
+        fact_done, fstats = bench_trace(fact, cfg, trace, **dims)
+        print(format_stats("factorized", fstats))
+        agree = greedy_agreement(dense_done, fact_done)
+        print(f"greedy token agreement dense vs factorized: {agree:.1%}")
     return 0
 
 

@@ -158,18 +158,30 @@ class TransformerLM(Module):
     # -- serving --------------------------------------------------------------
 
     def init_cache(self, batch: int, max_len: int, cfg: ArchConfig,
-                   dtype=jnp.bfloat16) -> KVCache:
+                   dtype=jnp.bfloat16, per_slot: bool = False) -> KVCache:
+        """``per_slot=True`` gives each batch row its own length counter
+        (shape ``(n_layers, batch)``) so rows decode at independent
+        positions — the continuous-batching cache layout."""
         w = cfg.window
         slots = min(max_len, w) if w else max_len
         kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        lshape = (self.n_layers, batch) if per_slot else (self.n_layers,)
         return KVCache(
             k=jnp.zeros((self.n_layers, batch, slots, kvh, hd), dtype),
             v=jnp.zeros((self.n_layers, batch, slots, kvh, hd), dtype),
-            length=jnp.zeros((self.n_layers,), jnp.int32),
+            length=jnp.zeros(lshape, jnp.int32),
         )
 
-    def prefill(self, tokens: jax.Array, cache: KVCache):
-        """Returns logits for the LAST position + the filled cache."""
+    def prefill(self, tokens: jax.Array, cache: KVCache, *,
+                length: Optional[jax.Array] = None):
+        """Returns logits for the LAST position + the filled cache.
+
+        ``length`` (scalar or ``(batch,)`` int32) marks the true prompt
+        length of right-padded prompts: logits are taken at ``length - 1``
+        and the returned cache's counters are set to ``length`` so decode
+        resumes there.  Sound for causal self-attention — padded positions
+        never influence positions ``< length``, and decode overwrites each
+        padded cache row before it becomes visible."""
         x = constrain_acts(self.embed(tokens))
 
         def body(x, xs):
@@ -181,8 +193,25 @@ class TransformerLM(Module):
             return constrain_acts(y), c2
 
         x, new_cache = jax.lax.scan(body, x, (self.blocks, cache))
-        logits = self._head(self.final_norm(x[:, -1:]))
-        return logits, new_cache
+        # per-layer Attention.prefill emits scalar lengths; restore the INPUT
+        # cache's layout (per-slot caches keep their (n_layers, batch) shape)
+        if length is None:
+            if cache.length.ndim == 2:
+                new_cache = new_cache._replace(length=jnp.broadcast_to(
+                    new_cache.length[:, None], cache.length.shape))
+            return self._head(self.final_norm(x[:, -1:])), new_cache
+        idx = jnp.asarray(length, jnp.int32)
+        if idx.ndim == 1 and cache.length.ndim != 2:
+            raise ValueError(
+                "(batch,) prefill length requires a per_slot=True cache "
+                f"(cache.length is {cache.length.shape})")
+        rows = idx if idx.ndim else jnp.full((tokens.shape[0],), idx)
+        last = jnp.take_along_axis(x, (rows - 1)[:, None, None], axis=1)
+        logits = self._head(self.final_norm(last))
+        # scalar broadcasts over any layout; (batch,) fans out over layers
+        new_len = jnp.broadcast_to(idx if idx.ndim == 0 else idx[None, :],
+                                   cache.length.shape)
+        return logits, new_cache._replace(length=new_len)
 
     def decode(self, token: jax.Array, cache: KVCache):
         """token: (batch, 1) -> logits (batch, 1, vocab) + updated cache."""

@@ -28,15 +28,17 @@ NEG_INF = -1e30
 class KVCache(NamedTuple):
     k: jax.Array  # (batch, max_len, kv_heads, head_dim)
     v: jax.Array  # (batch, max_len, kv_heads, head_dim)
-    length: jax.Array  # () int32 — number of valid positions
+    length: jax.Array  # () int32 — number of valid positions; or (batch,)
+    # int32 in per-slot mode (continuous batching: each row advances
+    # independently, see ``repro.serve``).
 
     @staticmethod
     def zeros(batch: int, max_len: int, kv_heads: int, head_dim: int,
-              dtype=jnp.bfloat16) -> "KVCache":
+              dtype=jnp.bfloat16, per_slot: bool = False) -> "KVCache":
         return KVCache(
             k=jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
             v=jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
-            length=jnp.zeros((), jnp.int32),
+            length=jnp.zeros((batch,) if per_slot else (), jnp.int32),
         )
 
 
@@ -226,29 +228,51 @@ class Attention(Module):
         return self.o_proj(out), KVCache(new_k, new_v, jnp.asarray(s, jnp.int32))
 
     def decode(self, x: jax.Array, cache: KVCache) -> tuple[jax.Array, KVCache]:
-        """One-token decode step. x: (batch, 1, dim)."""
+        """One-token decode step. x: (batch, 1, dim).
+
+        ``cache.length`` is either a scalar (lock-step batch: every row sits
+        at the same position) or a ``(batch,)`` vector (per-slot mode for
+        continuous batching: each row advances independently, with its own
+        RoPE position, cache write offset, and validity mask)."""
         b = x.shape[0]
         pos = cache.length
-        positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+        per_slot = pos.ndim == 1
+        positions = (pos[:, None].astype(jnp.int32) if per_slot
+                     else jnp.full((b, 1), pos, dtype=jnp.int32))
         q, k, v = self._qkv(x, positions=positions, kv_positions=positions)
         k, v = k.astype(cache.k.dtype), v.astype(cache.v.dtype)
         if self._is_ring(cache):
             w = self.window
             slot = pos % w
-            new_k = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
-            new_v = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
-            # slot i holds absolute position pos - ((pos - i) mod w); valid
-            # once non-negative.  Window recency holds by construction.
             i = jnp.arange(w)
-            kpos = pos - jnp.mod(pos - i, w)
-            valid = kpos >= 0
+            if per_slot:
+                rows = jnp.arange(b)
+                new_k = cache.k.at[rows, slot].set(k[:, 0])
+                new_v = cache.v.at[rows, slot].set(v[:, 0])
+                kpos = pos[:, None] - jnp.mod(pos[:, None] - i[None, :], w)
+                valid = kpos >= 0  # (b, w)
+            else:
+                new_k = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+                new_v = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+                # slot i holds absolute position pos - ((pos - i) mod w); valid
+                # once non-negative.  Window recency holds by construction.
+                kpos = pos - jnp.mod(pos - i, w)
+                valid = kpos >= 0
         else:
-            new_k = jax.lax.dynamic_update_slice(cache.k, k, (0, pos, 0, 0))
-            new_v = jax.lax.dynamic_update_slice(cache.v, v, (0, pos, 0, 0))
             kpos = jnp.arange(cache.k.shape[1])
-            valid = kpos <= pos
-            if self.window > 0:
-                valid = valid & (kpos > pos - self.window)
-        mask = valid[None, None, None, :]
+            if per_slot:
+                rows = jnp.arange(b)
+                new_k = cache.k.at[rows, pos].set(k[:, 0])
+                new_v = cache.v.at[rows, pos].set(v[:, 0])
+                valid = kpos[None, :] <= pos[:, None]
+                if self.window > 0:
+                    valid = valid & (kpos[None, :] > pos[:, None] - self.window)
+            else:
+                new_k = jax.lax.dynamic_update_slice(cache.k, k, (0, pos, 0, 0))
+                new_v = jax.lax.dynamic_update_slice(cache.v, v, (0, pos, 0, 0))
+                valid = kpos <= pos
+                if self.window > 0:
+                    valid = valid & (kpos > pos - self.window)
+        mask = valid[:, None, None, :] if per_slot else valid[None, None, None, :]
         out = self._attend(q, new_k.astype(x.dtype), new_v.astype(x.dtype), mask)
         return self.o_proj(out), KVCache(new_k, new_v, pos + 1)

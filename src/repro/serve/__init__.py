@@ -1,3 +1,34 @@
-from repro.serve.engine import Engine, generate
+"""Serving subsystem: continuous batching over factorized (or dense) models.
 
-__all__ = ["Engine", "generate"]
+Three layers:
+
+* ``repro.serve.engine`` — device execution.  ``generate`` (one-shot
+  prefill + scan decode, the equivalence baseline), ``Engine`` (lock-step
+  fixed batch, kept for SSM/encdec caches), and ``ContinuousEngine``: a
+  fixed slot batch where requests join and leave mid-flight under ONE
+  jitted prefill and ONE jitted decode step.  Prompts are right-padded to
+  a fixed prefill width and spliced into per-slot KV-cache lanes with
+  ``lax.dynamic_update_slice``; per-request sampling params (temperature,
+  max_new_tokens, stop ids) ride along as batched arrays so stop/evict
+  decisions happen in-graph.
+* ``repro.serve.scheduler`` — host lifecycle.  FIFO pending queue,
+  admit -> prefill -> decode -> finish/evict, slot recycling.
+* ``repro.serve.trace`` — Poisson arrival traces, replay, latency stats.
+
+Quick use::
+
+    eng = ContinuousEngine(model, cfg, batch=8, max_len=256,
+                           max_prompt_len=64)
+    eng.submit([1, 2, 3], max_new_tokens=16)           # greedy
+    eng.submit(prompt2, max_new_tokens=8, temperature=0.7, stop_ids=(0,))
+    completions = eng.run()                            # drain the queue
+"""
+
+from repro.serve.engine import ContinuousEngine, Engine, generate
+from repro.serve.scheduler import Completion, Request, Scheduler
+from repro.serve.trace import (bench_trace, format_stats, greedy_agreement,
+                               latency_stats, make_trace, replay)
+
+__all__ = ["Engine", "ContinuousEngine", "generate", "Request", "Completion",
+           "Scheduler", "make_trace", "replay", "latency_stats",
+           "format_stats", "bench_trace", "greedy_agreement"]

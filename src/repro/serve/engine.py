@@ -1,17 +1,26 @@
-"""Batched serving engine: prefill + autoregressive decode.
+"""Serving engines: one-shot ``generate``, the lock-step ``Engine``
+baseline, and the continuous-batching ``ContinuousEngine``.
 
-``generate`` is the jittable core (greedy or temperature sampling via
-``lax.scan`` over decode steps); ``Engine`` wraps it with cache management
-and request batching for the serve driver / examples.
+``generate`` is the jittable one-shot core (prefill + ``lax.scan`` decode);
+``Engine`` keeps the fixed-slot lock-step shape (every row prefills and
+decodes together — still the right tool for SSM/encdec caches and for
+bit-exactness baselines).  ``ContinuousEngine`` is the serving system:
+requests are admitted into recyclable slots mid-flight, each slot carrying
+its own KV-cache lane, position counter, and sampling params, under ONE
+jitted prefill and ONE jitted decode step — no recompiles as traffic
+arrives.  See ``repro.serve.scheduler`` for the request lifecycle and
+``repro.serve.trace`` for workload replay.
 """
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.scheduler import Completion, Request, Scheduler
 
 
 def generate(model, tokens: jax.Array, cache, *, n_steps: int,
@@ -43,11 +52,11 @@ def generate(model, tokens: jax.Array, cache, *, n_steps: int,
 
 
 class Engine:
-    """Fixed-slot batched serving (the production serving shape).
+    """Fixed-slot lock-step batching (the pre-continuous baseline).
 
-    One jitted prefill + one jitted decode step; requests are padded into the
-    fixed batch. For the assigned decode shapes this is exactly the
-    ``serve_step`` the dry-run lowers."""
+    One jitted prefill + one jitted decode step; every row moves together.
+    Kept for SSM/encdec cache families and as the equivalence baseline for
+    ``ContinuousEngine``."""
 
     def __init__(self, model, cfg, *, batch: int, max_len: int,
                  cache_dtype=jnp.bfloat16, enc_len: Optional[int] = None):
@@ -78,3 +87,205 @@ class Engine:
             logits = self.decode_step(out[-1][:, None])
             out.append(jnp.argmax(logits[:, -1], -1))
         return jnp.stack(out, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+
+class _SlotArrays(NamedTuple):
+    """Per-slot device state: the batched half of the request lifecycle."""
+
+    tok: jax.Array       # (B,) int32 — last sampled token per slot
+    active: jax.Array    # (B,) bool — slot holds a live request
+    temp: jax.Array      # (B,) float32 — 0 => greedy
+    n_gen: jax.Array     # (B,) int32 — tokens generated so far (incl. first)
+    max_new: jax.Array   # (B,) int32
+    stop_ids: jax.Array  # (B, K) int32, -1 padded
+
+
+def _sample(logits: jax.Array, temp: jax.Array, key: jax.Array) -> jax.Array:
+    """Per-row temperature sampling: greedy rows and sampled rows coexist
+    in one batch (Gumbel-max so a single argmax serves both branches)."""
+    greedy = jnp.argmax(logits, axis=-1)
+    g = jax.random.gumbel(key, logits.shape, jnp.float32)
+    t = jnp.maximum(temp, 1e-6)[:, None]
+    sampled = jnp.argmax(logits.astype(jnp.float32) / t + g, axis=-1)
+    return jnp.where(temp > 0, sampled, greedy).astype(jnp.int32)
+
+
+class ContinuousEngine:
+    """Continuous-batching serving engine over a fixed slot batch.
+
+    Requests join and leave mid-flight: a prefill runs on a single-row lane
+    (prompts right-padded to ``max_prompt_len`` so the jit compiles once),
+    the lane is spliced into the batched cache at the free slot with
+    ``lax.dynamic_update_slice``, and the batched decode step advances every
+    active slot at its own position.  Stop-token / max-token / cache-full
+    eviction is computed in-graph from batched per-request params; the host
+    scheduler only mirrors the lifecycle and collects tokens.
+
+    Requires a global-attention KV cache (``cfg.window == 0``) — ring-buffer
+    lanes cannot be slot-recycled yet (see ROADMAP).
+    """
+
+    def __init__(self, model, cfg, *, batch: int, max_len: int,
+                 max_prompt_len: int, max_stop_ids: int = 4,
+                 cache_dtype=jnp.float32, seed: int = 0):
+        if cfg.window:
+            raise ValueError(
+                "continuous batching needs global attention (window=0); "
+                "ring-buffer caches cannot be slot-recycled yet")
+        if not 0 < max_prompt_len < max_len:
+            raise ValueError("need 0 < max_prompt_len < max_len")
+        self.model, self.cfg = model, cfg
+        self.batch, self.max_len = batch, max_len
+        self.max_prompt_len, self.max_stop_ids = max_prompt_len, max_stop_ids
+        try:
+            self.cache = model.init_cache(batch, max_len, cfg,
+                                          dtype=cache_dtype, per_slot=True)
+        except TypeError:
+            raise ValueError(
+                f"{type(model).__name__} has no per-slot KV cache; "
+                "continuous batching supports attention-KV models only")
+        self._lane0 = model.init_cache(1, max_len, cfg, dtype=cache_dtype)
+        self.state = _SlotArrays(
+            tok=jnp.zeros((batch,), jnp.int32),
+            active=jnp.zeros((batch,), bool),
+            temp=jnp.zeros((batch,), jnp.float32),
+            n_gen=jnp.zeros((batch,), jnp.int32),
+            max_new=jnp.ones((batch,), jnp.int32),
+            stop_ids=jnp.full((batch, max_stop_ids), -1, jnp.int32),
+        )
+        self.scheduler = Scheduler(batch)
+        self._base_key = jax.random.PRNGKey(seed)
+        self._tick = 0
+
+        def prefill_fn(toks, lane, length, temp, key):
+            logits, lane = model.prefill(toks, lane, length=length)
+            first = _sample(logits[:, 0], temp[None], key)[0]
+            return first, lane
+
+        def admit_fn(cache, state, lane, slot, length, first, temp,
+                     max_new, stop_row):
+            k = jax.lax.dynamic_update_slice(cache.k, lane.k,
+                                             (0, slot, 0, 0, 0))
+            v = jax.lax.dynamic_update_slice(cache.v, lane.v,
+                                             (0, slot, 0, 0, 0))
+            ln = cache.length.at[:, slot].set(length)
+            done0 = (jnp.any(first == stop_row) | (max_new <= 1)
+                     | (length >= max_len))
+            state = state._replace(
+                tok=state.tok.at[slot].set(first),
+                active=state.active.at[slot].set(~done0),
+                temp=state.temp.at[slot].set(temp),
+                n_gen=state.n_gen.at[slot].set(1),
+                max_new=state.max_new.at[slot].set(max_new),
+                stop_ids=state.stop_ids.at[slot].set(stop_row),
+            )
+            return cache._replace(k=k, v=v, length=ln), state, done0
+
+        def decode_fn(cache, state, key):
+            logits, new_cache = model.decode(state.tok[:, None], cache)
+            nxt = _sample(logits[:, 0], state.temp, key)
+            nxt = jnp.where(state.active, nxt, state.tok)
+            # frozen slots keep their cache position and token
+            length = jnp.where(state.active[None, :], new_cache.length,
+                               cache.length)
+            n_gen = jnp.where(state.active, state.n_gen + 1, state.n_gen)
+            stop_hit = jnp.any(nxt[:, None] == state.stop_ids, axis=-1)
+            done = state.active & (stop_hit | (n_gen >= state.max_new)
+                                   | (length[0] >= max_len))
+            state = state._replace(tok=nxt, active=state.active & ~done,
+                                   n_gen=n_gen)
+            return new_cache._replace(length=length), state, nxt, done
+
+        self._prefill = jax.jit(prefill_fn)
+        self._admit = jax.jit(admit_fn, donate_argnums=(0, 1))
+        self._decode = jax.jit(decode_fn, donate_argnums=(0, 1))
+
+    # -- request intake ------------------------------------------------------
+
+    def submit(self, prompt, *, max_new_tokens: Optional[int] = None,
+               temperature: float = 0.0,
+               stop_ids: Sequence[int] = ()) -> int:
+        """Queue one request; returns its uid (FIFO admission).
+
+        ``prompt`` is either a token-id sequence (with ``max_new_tokens``
+        etc. given here) or a prebuilt :class:`Request` — both go through
+        the same engine-limit validation."""
+        if isinstance(prompt, Request):
+            req = prompt
+        else:
+            if max_new_tokens is None:
+                raise ValueError("max_new_tokens is required")
+            req = Request(prompt=np.asarray(prompt, np.int32),
+                          max_new_tokens=max_new_tokens,
+                          temperature=temperature, stop_ids=tuple(stop_ids))
+        if req.prompt.size > self.max_prompt_len:
+            raise ValueError(
+                f"prompt length {req.prompt.size} > max_prompt_len "
+                f"{self.max_prompt_len}")
+        if len(req.stop_ids) > self.max_stop_ids:
+            raise ValueError(f"more than {self.max_stop_ids} stop ids")
+        return self.scheduler.submit(req)
+
+    def _next_key(self) -> jax.Array:
+        self._tick += 1
+        return jax.random.fold_in(self._base_key, self._tick)
+
+    # -- serving loop --------------------------------------------------------
+
+    def step(self) -> list:
+        """Admit pending requests into free slots, then run one batched
+        decode step.  Returns the :class:`Completion`s finished this step."""
+        finished = []
+        while (adm := self.scheduler.next_admission()) is not None:
+            slot, req = adm
+            toks = np.zeros((1, self.max_prompt_len), np.int32)
+            toks[0, :req.prompt.size] = req.prompt
+            stop_row = np.full((self.max_stop_ids,), -1, np.int32)
+            stop_row[:len(req.stop_ids)] = req.stop_ids
+            first, lane = self._prefill(
+                jnp.asarray(toks), self._lane0,
+                jnp.asarray(req.prompt.size, jnp.int32),
+                jnp.asarray(req.temperature, jnp.float32), self._next_key())
+            self.cache, self.state, done0 = self._admit(
+                self.cache, self.state, lane, jnp.asarray(slot, jnp.int32),
+                jnp.asarray(req.prompt.size, jnp.int32), first,
+                jnp.asarray(req.temperature, jnp.float32),
+                jnp.asarray(req.max_new_tokens, jnp.int32),
+                jnp.asarray(stop_row))
+            self.scheduler.bind(slot, req, int(first))
+            if bool(done0):
+                reason = self.scheduler.finish_reason(
+                    slot, req.prompt.size, self.max_len)
+                finished.append(self.scheduler.finish(slot, reason))
+
+        running = self.scheduler.running_slots()
+        if running:
+            self.cache, self.state, nxt, done = self._decode(
+                self.cache, self.state, self._next_key())
+            nxt_np, done_np = np.asarray(nxt), np.asarray(done)
+            pos_np = np.asarray(self.cache.length[0])
+            for slot in running:
+                self.scheduler.append_token(slot, nxt_np[slot])
+                if done_np[slot]:
+                    reason = self.scheduler.finish_reason(
+                        slot, int(pos_np[slot]), self.max_len)
+                    finished.append(self.scheduler.finish(slot, reason))
+        return finished
+
+    def run(self, max_steps: Optional[int] = None) -> list:
+        """Step until every submitted request has finished."""
+        out, steps = [], 0
+        while not self.scheduler.idle:
+            out.extend(self.step())
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return sorted(out, key=lambda c: c.uid)
+
+
+__all__ = ["generate", "Engine", "ContinuousEngine", "Request", "Completion"]

@@ -1,0 +1,156 @@
+"""Request-level scheduler for continuous batching.
+
+Pure-Python bookkeeping — no jax here.  The :class:`Scheduler` owns the
+pending FIFO queue and the per-slot lifecycle
+
+    submit -> pending -> admit(slot) -> running -> finish/evict -> slot free
+
+while :class:`repro.serve.engine.ContinuousEngine` owns the device side
+(jitted prefill/decode, the batched KV cache, batched sampling params).
+Slots are recycled: the moment a request finishes, its slot is handed to
+the next pending request without touching the other in-flight rows.
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+_uid_counter = itertools.count()
+
+
+@dataclass
+class Request:
+    """One generation request with its own sampling parameters."""
+
+    prompt: np.ndarray  # (prompt_len,) int32 token ids
+    max_new_tokens: int
+    temperature: float = 0.0  # 0 => greedy
+    stop_ids: Tuple[int, ...] = ()
+    uid: int = field(default_factory=lambda: next(_uid_counter))
+    submitted_at: float = 0.0  # stamped by Scheduler.submit
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size < 1:
+            raise ValueError("empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+
+@dataclass
+class Completion:
+    """A finished request: generated tokens + lifecycle timestamps."""
+
+    uid: int
+    prompt_len: int
+    tokens: list  # generated ids, including the stop token if one fired
+    finish_reason: str  # 'stop' | 'length' | 'cache_full'
+    submitted_at: float = 0.0
+    first_token_at: float = 0.0
+    finished_at: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.finished_at - self.submitted_at
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_at - self.submitted_at
+
+
+@dataclass
+class _Slot:
+    request: Request
+    tokens: list
+    first_token_at: float
+
+
+class Scheduler:
+    """FIFO admission over ``n_slots`` recyclable decode slots."""
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        self.n_slots = n_slots
+        self.pending: deque = deque()
+        self.slots: list = [None] * n_slots
+
+    # -- queue ---------------------------------------------------------------
+
+    def submit(self, request: Request) -> int:
+        request.submitted_at = time.monotonic()
+        self.pending.append(request)
+        return request.uid
+
+    @property
+    def n_pending(self) -> int:
+        return len(self.pending)
+
+    @property
+    def n_running(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def idle(self) -> bool:
+        return not self.pending and self.n_running == 0
+
+    def running_slots(self) -> list:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def free_slot(self) -> Optional[int]:
+        """Lowest-index free slot, or None when the batch is full."""
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def next_admission(self) -> Optional[Tuple[int, Request]]:
+        """(slot, request) for the next admissible pending request."""
+        slot = self.free_slot()
+        if slot is None or not self.pending:
+            return None
+        return slot, self.pending.popleft()
+
+    # -- per-slot lifecycle --------------------------------------------------
+
+    def bind(self, slot: int, request: Request, first_token: int) -> None:
+        """Attach an admitted request to its slot (prefill done)."""
+        assert self.slots[slot] is None, f"slot {slot} busy"
+        self.slots[slot] = _Slot(request=request, tokens=[int(first_token)],
+                                 first_token_at=time.monotonic())
+
+    def append_token(self, slot: int, token: int) -> None:
+        self.slots[slot].tokens.append(int(token))
+
+    def finish(self, slot: int, reason: str) -> Completion:
+        """Evict the slot's request and free the slot for reuse."""
+        s = self.slots[slot]
+        self.slots[slot] = None
+        return Completion(
+            uid=s.request.uid,
+            prompt_len=int(s.request.prompt.size),
+            tokens=s.tokens,
+            finish_reason=reason,
+            submitted_at=s.request.submitted_at,
+            first_token_at=s.first_token_at,
+            finished_at=time.monotonic(),
+        )
+
+    def finish_reason(self, slot: int, cache_pos: int, max_len: int) -> str:
+        """Classify why a slot's request stopped (host-side mirror of the
+        batched done mask computed on device)."""
+        s = self.slots[slot]
+        if s.tokens and s.tokens[-1] in s.request.stop_ids:
+            return "stop"
+        if len(s.tokens) >= s.request.max_new_tokens:
+            return "length"
+        return "cache_full" if cache_pos >= max_len else "length"
+
+
+__all__ = ["Request", "Completion", "Scheduler"]

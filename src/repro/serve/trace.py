@@ -1,0 +1,116 @@
+"""Arrival-trace generation and replay for serving benchmarks.
+
+A trace is a list of ``(arrival_tick, Request)`` pairs: inter-arrival gaps
+are exponential (a Poisson process in units of decode steps, scaled by
+``load`` = expected new requests per decode step), prompt lengths and
+generation budgets are sampled per request.  ``replay`` drives a
+:class:`~repro.serve.engine.ContinuousEngine` through the trace — requests
+are submitted when the engine's step counter passes their arrival tick, so
+admission genuinely interleaves with in-flight decoding — and
+``latency_stats`` reduces the completions to throughput + p50/p95.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.serve.scheduler import Completion, Request
+
+
+def make_trace(n_requests: int, *, seed: int = 0, load: float = 0.25,
+               min_prompt: int = 4, max_prompt: int = 64,
+               min_new: int = 4, max_new: int = 32,
+               temperature: float = 0.0, vocab: int = 256,
+               ) -> List[Tuple[float, Request]]:
+    """Sample a reproducible trace of variable-length requests."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / max(load, 1e-6), n_requests)
+    arrivals = np.cumsum(gaps)
+    trace = []
+    for t in arrivals:
+        plen = int(rng.integers(min_prompt, max_prompt + 1))
+        trace.append((float(t), Request(
+            prompt=rng.integers(0, vocab, plen).astype(np.int32),
+            max_new_tokens=int(rng.integers(min_new, max_new + 1)),
+            temperature=temperature,
+        )))
+    return trace
+
+
+def replay(engine, trace: List[Tuple[float, Request]],
+           max_steps: int = 100_000) -> Tuple[List[Completion], float]:
+    """Run a trace to completion. Returns (completions, wall seconds)."""
+    pending = sorted(trace, key=lambda p: p[0])
+    done: List[Completion] = []
+    i, tick = 0, 0
+    t0 = time.monotonic()
+    while i < len(pending) or not engine.scheduler.idle:
+        while i < len(pending) and pending[i][0] <= tick:
+            engine.submit(pending[i][1])  # engine-level limit validation
+            i += 1
+        done.extend(engine.step())
+        tick += 1
+        if tick >= max_steps:
+            raise RuntimeError(f"trace did not drain in {max_steps} steps")
+    return sorted(done, key=lambda c: c.uid), time.monotonic() - t0
+
+
+def latency_stats(completions: List[Completion], wall: float) -> dict:
+    """Throughput + per-request latency percentiles for a replay."""
+    if not completions:
+        return {"requests": 0, "generated_tokens": 0, "wall_s": wall,
+                "tokens_per_s": 0.0, "latency_p50_ms": 0.0,
+                "latency_p95_ms": 0.0, "ttft_p50_ms": 0.0,
+                "ttft_p95_ms": 0.0}
+    lats = np.array([c.latency for c in completions])
+    ttfts = np.array([c.ttft for c in completions])
+    n_tok = int(sum(len(c.tokens) for c in completions))
+    return {
+        "requests": len(completions),
+        "generated_tokens": n_tok,
+        "wall_s": wall,
+        "tokens_per_s": n_tok / max(wall, 1e-9),
+        "latency_p50_ms": float(np.percentile(lats, 50) * 1e3),
+        "latency_p95_ms": float(np.percentile(lats, 95) * 1e3),
+        "ttft_p50_ms": float(np.percentile(ttfts, 50) * 1e3),
+        "ttft_p95_ms": float(np.percentile(ttfts, 95) * 1e3),
+    }
+
+
+def bench_trace(model, cfg, trace: List[Tuple[float, Request]], *,
+                batch: int, max_len: int, max_prompt_len: int,
+                ) -> Tuple[List[Completion], dict]:
+    """Build a ContinuousEngine, warm the jitted prefill/decode pair, then
+    replay ``trace`` — the shared body of the serve driver and benchmark."""
+    from repro.serve.engine import ContinuousEngine
+
+    engine = ContinuousEngine(model, cfg, batch=batch, max_len=max_len,
+                              max_prompt_len=max_prompt_len)
+    engine.submit(np.zeros(2, np.int32), max_new_tokens=2)  # compile warmup
+    engine.run()
+    completions, wall = replay(engine, trace)
+    return completions, latency_stats(completions, wall)
+
+
+def greedy_agreement(a: List[Completion], b: List[Completion]) -> float:
+    """Mean per-request token agreement between two replays of one trace
+    (compared over the common prefix when lengths differ)."""
+    pairs = [(np.array(ca.tokens), np.array(cb.tokens))
+             for ca, cb in zip(a, b)]
+    return float(np.mean([np.mean(ta[:len(tb)] == tb[:len(ta)])
+                          for ta, tb in pairs]))
+
+
+def format_stats(label: str, stats: dict) -> str:
+    return (f"{label:11s}: {stats['tokens_per_s']:9.1f} tok/s   "
+            f"p50 {stats['latency_p50_ms']:7.1f} ms   "
+            f"p95 {stats['latency_p95_ms']:7.1f} ms   "
+            f"ttft p50 {stats['ttft_p50_ms']:6.1f} ms   "
+            f"({stats['requests']} reqs, {stats['generated_tokens']} tok)")
+
+
+__all__ = ["make_trace", "replay", "latency_stats", "format_stats",
+           "bench_trace", "greedy_agreement"]

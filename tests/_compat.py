@@ -1,0 +1,8 @@
+"""jax version compatibility shims shared by the test suite."""
+
+import jax
+
+# jax.shard_map only exists from 0.5; fall back to the experimental home
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:
+    from jax.experimental.shard_map import shard_map  # noqa: F401

@@ -4,8 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given
-from hypothesis import strategies as st
+from _hyp import given, st
 
 from repro import auto_fact, defactorize, nn
 from repro.core import r_max, resolve_rank, should_factorize
@@ -197,3 +196,76 @@ def test_auto_fact_whole_model_runs(key):
     logits, _ = fact(toks)
     assert logits.shape == (2, 16, cfg.vocab)
     assert bool(jnp.isfinite(logits).all())
+
+
+# ---- FactReport accounting ---------------------------------------------------
+
+
+def _factored_param_delta(model, fact):
+    """params(model) - params(fact), counting only factorized targets (all
+    other leaves are shared/unchanged, so the tree-wide delta equals the
+    before/after delta over factorized layers)."""
+    from repro.nn import param_count
+
+    return param_count(model) - param_count(fact)
+
+
+def test_report_param_counts_match_pytree(key):
+    """params_before/params_after must equal the actual pytree param counts
+    of the replaced weights (bias leaves are carried over unchanged)."""
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("paper-tiny").reduced()
+    model = build_model(key, cfg)
+    fact, rep = auto_fact(model, rank=0.5, solver="svd",
+                          exclude=["embed", "lm_head"], return_report=True)
+    assert rep.params_before - rep.params_after == \
+        _factored_param_delta(model, fact)
+    # entries carry per-layer (m, n, r); params_* count the whole
+    # layer-stacked weights, hence the n_layers factor
+    led_after = sum(r * (m + n) for _, kind, m, n, r in rep.entries)
+    dense_before = sum(m * n for _, kind, m, n, r in rep.entries)
+    assert rep.params_after == cfg.n_layers * led_after
+    assert rep.params_before == cfg.n_layers * dense_before
+    assert rep.compression == rep.params_before / rep.params_after
+
+
+def test_report_stacked_counts_include_leading_axes(key):
+    """Layer-stacked weights: report counts must cover the whole stack,
+    not a single slice."""
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("paper-tiny").reduced()
+    model = build_model(key, cfg)
+    fact, rep = auto_fact(model, rank=0.5, solver="svd",
+                          exclude=["embed", "lm_head"], return_report=True)
+    total_a_b = 0
+    for proj in (fact.blocks.attn.q_proj, fact.blocks.attn.k_proj,
+                 fact.blocks.attn.v_proj, fact.blocks.attn.o_proj,
+                 fact.blocks.mlp.gate_proj, fact.blocks.mlp.up_proj,
+                 fact.blocks.mlp.down_proj):
+        assert isinstance(proj, nn.LED)
+        total_a_b += proj.A.size + proj.B.size  # includes the stack axis
+    assert rep.params_after == total_a_b
+
+
+def test_report_submodule_filter_reflected(attn):
+    fact, rep = auto_fact(attn, rank=8, submodules=["q_proj", "k_proj"],
+                          return_report=True)
+    assert {e[0] for e in rep.entries} == {"q_proj", "k_proj"}
+    skipped = {p for p, why in rep.skipped}
+    assert skipped == {"v_proj", "o_proj"}
+    assert all(why == "filtered" for _, why in rep.skipped)
+    # accounting covers ONLY the factorized subset
+    assert rep.params_before == 64 * 64 + 64 * 32  # q (64x64) + k (64x32)
+    assert rep.params_after == 8 * (64 + 64) + 8 * (64 + 32)
+
+
+def test_report_exclude_filter_reflected(attn):
+    fact, rep = auto_fact(attn, rank=8, exclude=["o_proj"],
+                          return_report=True)
+    assert {e[0] for e in rep.entries} == {"q_proj", "k_proj", "v_proj"}
+    assert [p for p, why in rep.skipped] == ["o_proj"]
+    assert rep.params_before == 64 * 64 + 2 * 64 * 32  # o_proj not counted

@@ -74,6 +74,8 @@ def test_psum_reduction_in_shard_map():
         out, st2 = compress_and_reduce(g, st, axis_name="dp")
         return out
 
-    out = jax.shard_map(f, mesh=mesh, in_specs=(P(), P()), out_specs=P())(g, st)
+    from _compat import shard_map
+
+    out = shard_map(f, mesh=mesh, in_specs=(P(), P()), out_specs=P())(g, st)
     np.testing.assert_allclose(np.asarray(out["g0"]), np.asarray(g["g0"]),
                                atol=1e-3)

@@ -4,8 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.kernels.ops import led_matmul
 from repro.kernels.ref import led_matmul_ref
@@ -92,6 +91,50 @@ def test_led_kernel_grad_via_jnp_path(key):
     x = jax.random.normal(key, (2, 16))
     g = jax.grad(lambda m: jnp.sum(m(x) ** 2))(led)
     assert g.A.shape == led.A.shape and bool(jnp.isfinite(g.A).all())
+
+
+def test_led_trainable_grads_match_ref_padded_shapes():
+    """jax.grad of the custom VJP vs jax.grad of the pure-jnp reference on
+    non-divisible shapes: M, K and N all overhang their block grids, so the
+    backward must slice the padding back out of every gradient."""
+    m, k, r, n = 300, 600, 9, 300  # default blocks 256/512/256 -> all pad
+    x, a, b = _mk(m, k, r, n, jnp.float32, seed=42)
+    w = jax.random.normal(jax.random.PRNGKey(99), (m, n))  # non-uniform dy
+
+    loss_pl = lambda x, a, b: jnp.sum(led_matmul(x, a, b) * w)
+    loss_ref = lambda x, a, b: jnp.sum(led_matmul_ref(x, a, b) * w)
+    from repro.kernels.ops import led_matmul_trainable
+
+    loss_tr = lambda x, a, b: jnp.sum(led_matmul_trainable(x, a, b) * w)
+    g_tr = jax.grad(loss_tr, argnums=(0, 1, 2))(x, a, b)
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(x, a, b)
+    for gt, gr, name in zip(g_tr, g_ref, "xab"):
+        assert gt.shape == gr.shape
+        np.testing.assert_allclose(np.asarray(gt), np.asarray(gr),
+                                   atol=1e-3, rtol=1e-4,
+                                   err_msg=f"d{name} mismatch")
+
+
+def test_led_trainable_grads_match_ref_batched_leading_axes():
+    """Batched leading axes: the VJP flattens (2, 3, M) to rows and must
+    reshape dx back; dA/dB accumulate over every leading axis."""
+    from repro.kernels.ops import led_matmul_trainable
+
+    kx, ka, kb, kw = jax.random.split(jax.random.PRNGKey(5), 4)
+    x = jax.random.normal(kx, (2, 3, 40, 64))
+    a = jax.random.normal(ka, (64, 8)) / 8.0
+    b = jax.random.normal(kb, (8, 48)) / 2.8
+    w = jax.random.normal(kw, (2, 3, 40, 48))
+
+    loss_tr = lambda x, a, b: jnp.sum(led_matmul_trainable(x, a, b) * w)
+    loss_ref = lambda x, a, b: jnp.sum(led_matmul_ref(x, a, b) * w)
+    g_tr = jax.grad(loss_tr, argnums=(0, 1, 2))(x, a, b)
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(x, a, b)
+    for gt, gr, name in zip(g_tr, g_ref, "xab"):
+        assert gt.shape == gr.shape
+        np.testing.assert_allclose(np.asarray(gt), np.asarray(gr),
+                                   atol=1e-3, rtol=1e-4,
+                                   err_msg=f"d{name} mismatch")
 
 
 def test_led_trainable_gradients_match_jnp(key):

@@ -1,0 +1,234 @@
+"""Continuous batching: scheduler lifecycle + engine equivalence.
+
+The load-bearing guarantee is the last test: the continuous engine, with
+requests admitted mid-flight into recycled slots and prompts right-padded
+to a fixed prefill width, must produce BIT-IDENTICAL greedy tokens to the
+one-shot ``generate`` baseline run per request at exact length.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import ContinuousEngine, Request, Scheduler, generate
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("paper-tiny").reduced()
+    model = build_model(jax.random.PRNGKey(0), cfg)
+    return model, cfg
+
+
+def _baseline(model, cfg, prompt, n, max_len=32):
+    cache = model.init_cache(1, max_len, cfg, dtype=jnp.float32)
+    out, _ = generate(model, jnp.asarray(prompt)[None, :], cache, n_steps=n)
+    return np.asarray(out)[0]
+
+
+def _prompts(lengths, vocab, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, n).astype(np.int32) for n in lengths]
+
+
+# ---- Scheduler bookkeeping (no jax) -----------------------------------------
+
+
+def test_admission_is_fifo():
+    sched = Scheduler(2)
+    reqs = [Request(prompt=np.array([1]), max_new_tokens=1) for _ in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    s0, r0 = sched.next_admission()
+    sched.bind(s0, r0, first_token=7)
+    s1, r1 = sched.next_admission()
+    sched.bind(s1, r1, first_token=7)
+    assert (s0, s1) == (0, 1)
+    assert (r0.uid, r1.uid) == (reqs[0].uid, reqs[1].uid)
+    assert sched.next_admission() is None  # batch full, third stays queued
+    assert sched.n_pending == 1
+
+    done = sched.finish(0, "length")
+    assert done.uid == reqs[0].uid and done.tokens == [7]
+    s2, r2 = sched.next_admission()  # freed slot goes to the queued request
+    assert s2 == 0 and r2.uid == reqs[2].uid
+
+
+def test_scheduler_slot_accounting():
+    sched = Scheduler(2)
+    assert sched.idle and sched.free_slot() == 0
+    sched.submit(Request(prompt=np.array([1]), max_new_tokens=2))
+    assert not sched.idle
+    slot, req = sched.next_admission()
+    sched.bind(slot, req, first_token=3)
+    assert sched.running_slots() == [0] and sched.free_slot() == 1
+    sched.append_token(0, 5)
+    comp = sched.finish(0, "length")
+    assert comp.tokens == [3, 5] and sched.idle
+
+
+def test_request_validation():
+    with pytest.raises(ValueError):
+        Request(prompt=np.array([], np.int32), max_new_tokens=1)
+    with pytest.raises(ValueError):
+        Request(prompt=np.array([1]), max_new_tokens=0)
+
+
+# ---- engine lifecycle -------------------------------------------------------
+
+
+def test_slot_eviction_on_stop_token(setup):
+    model, cfg = setup
+    prompt = _prompts([6], cfg.vocab, seed=3)[0]
+    ref = _baseline(model, cfg, prompt, 8)
+    # stop on the first token the model will actually emit after step 0
+    stop = int(ref[1]) if ref[1] != ref[0] else int(ref[0])
+    first_hit = int(np.argmax(ref == stop))
+    eng = ContinuousEngine(model, cfg, batch=2, max_len=32, max_prompt_len=12)
+    eng.submit(prompt, max_new_tokens=8, stop_ids=(stop,))
+    (comp,) = eng.run()
+    assert comp.finish_reason == "stop"
+    assert comp.tokens == ref[:first_hit + 1].tolist()  # stop id included
+    assert eng.scheduler.idle  # slot freed
+
+
+def test_slot_reuse_by_queued_request(setup):
+    """More requests than slots: every queued request must be served through
+    a recycled slot and still match its one-shot baseline exactly."""
+    model, cfg = setup
+    prompts = _prompts([5, 9, 12, 7, 4], cfg.vocab, seed=1)
+    eng = ContinuousEngine(model, cfg, batch=2, max_len=32, max_prompt_len=12)
+    uids = [eng.submit(p, max_new_tokens=6) for p in prompts]
+    comps = eng.run()
+    assert [c.uid for c in comps] == sorted(uids)
+    for p, c in zip(prompts, comps):
+        assert c.finish_reason == "length"
+        np.testing.assert_array_equal(np.array(c.tokens),
+                                      _baseline(model, cfg, p, 6))
+
+
+def test_mid_flight_admission(setup):
+    """A request submitted while another is mid-decode joins the running
+    batch without perturbing it (and both match their baselines)."""
+    model, cfg = setup
+    long_p, late_p = _prompts([9, 6], cfg.vocab, seed=2)
+    eng = ContinuousEngine(model, cfg, batch=2, max_len=32, max_prompt_len=12)
+    eng.submit(long_p, max_new_tokens=10)
+    for _ in range(4):
+        eng.step()
+    eng.submit(late_p, max_new_tokens=6)  # joins mid-flight
+    comps = eng.run()
+    by_len = {c.prompt_len: c for c in comps}
+    np.testing.assert_array_equal(np.array(by_len[9].tokens),
+                                  _baseline(model, cfg, long_p, 10))
+    np.testing.assert_array_equal(np.array(by_len[6].tokens),
+                                  _baseline(model, cfg, late_p, 6))
+
+
+def test_per_request_sampling_isolation(setup):
+    """A temperature-sampled request must not perturb the greedy request
+    decoding in the adjacent slot (per-slot params are batched arrays)."""
+    model, cfg = setup
+    greedy_p, samp_p = _prompts([6, 9], cfg.vocab, seed=4)
+    ref = _baseline(model, cfg, greedy_p, 8)
+    eng = ContinuousEngine(model, cfg, batch=2, max_len=32, max_prompt_len=12,
+                           seed=11)
+    eng.submit(samp_p, max_new_tokens=5, temperature=1.0)
+    eng.submit(greedy_p, max_new_tokens=8)
+    comps = eng.run()
+    by_len = {c.prompt_len: c for c in comps}
+    np.testing.assert_array_equal(np.array(by_len[6].tokens), ref)
+    assert len(by_len[9].tokens) == 5
+    assert max(by_len[9].tokens) < cfg.vocab
+
+
+def test_max_new_tokens_one(setup):
+    """A 1-token request finishes at admission (prefill-only)."""
+    model, cfg = setup
+    p = _prompts([5], cfg.vocab, seed=5)[0]
+    eng = ContinuousEngine(model, cfg, batch=1, max_len=32, max_prompt_len=8)
+    eng.submit(p, max_new_tokens=1)
+    (comp,) = eng.run()
+    assert comp.finish_reason == "length"
+    assert comp.tokens == [int(_baseline(model, cfg, p, 1)[0])]
+
+
+def test_continuous_matches_generate_mixed_lengths(setup):
+    """Acceptance criterion: bit-identical greedy tokens vs the one-shot
+    baseline for a mixed-length request set pushed through 2 slots."""
+    model, cfg = setup
+    lengths = [5, 12, 8, 3, 10, 6]
+    prompts = _prompts(lengths, cfg.vocab, seed=6)
+    budgets = [6, 4, 8, 5, 3, 7]
+    eng = ContinuousEngine(model, cfg, batch=2, max_len=32, max_prompt_len=12)
+    for p, n in zip(prompts, budgets):
+        eng.submit(p, max_new_tokens=n)
+    comps = eng.run()
+    assert len(comps) == len(prompts)
+    for p, n, c in zip(prompts, budgets, comps):
+        np.testing.assert_array_equal(
+            np.array(c.tokens), _baseline(model, cfg, p, n),
+            err_msg=f"divergence for prompt_len={len(p)} budget={n}")
+
+
+def test_continuous_with_factorized_model(setup):
+    """auto_fact'ed models serve through the continuous engine, and the
+    factorized continuous path matches the factorized one-shot baseline."""
+    from repro.core import auto_fact
+
+    model, cfg = setup
+    fact = auto_fact(model, 0.5, solver="svd", exclude=["embed", "lm_head"])
+    prompts = _prompts([7, 4, 11], cfg.vocab, seed=7)
+    eng = ContinuousEngine(fact, cfg, batch=2, max_len=32, max_prompt_len=12)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=5)
+    for p, c in zip(prompts, eng.run()):
+        np.testing.assert_array_equal(np.array(c.tokens),
+                                      _baseline(fact, cfg, p, 5))
+
+
+def test_window_model_rejected(setup):
+    model, cfg = setup
+    with pytest.raises(ValueError):
+        ContinuousEngine(model, cfg.replace(window=8), batch=2, max_len=32,
+                         max_prompt_len=12)
+
+
+def test_prompt_longer_than_prefill_width_rejected(setup):
+    model, cfg = setup
+    eng = ContinuousEngine(model, cfg, batch=1, max_len=32, max_prompt_len=8)
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(9, np.int32), max_new_tokens=2)
+
+
+def test_batched_prefill_vector_lengths(setup):
+    """(batch,) prefill lengths over a per-slot cache: logits at each row's
+    own last position must equal the per-request scalar-length prefill
+    (batch != n_layers to catch layout mixups)."""
+    model, cfg = setup
+    lengths = [3, 7, 5]
+    prompts = _prompts(lengths, cfg.vocab, seed=8)
+    padded = np.zeros((3, 8), np.int32)
+    for i, p in enumerate(prompts):
+        padded[i, :len(p)] = p
+    cache = model.init_cache(3, 16, cfg, dtype=jnp.float32, per_slot=True)
+    logits, new_cache = model.prefill(jnp.asarray(padded), cache,
+                                      length=jnp.asarray(lengths))
+    np.testing.assert_array_equal(np.asarray(new_cache.length),
+                                  np.tile(lengths, (cfg.n_layers, 1)))
+    for i, p in enumerate(prompts):
+        lane = model.init_cache(1, 16, cfg, dtype=jnp.float32)
+        ref, _ = model.prefill(jnp.asarray(p)[None, :], lane)
+        np.testing.assert_array_equal(np.asarray(logits[i]),
+                                      np.asarray(ref[0]))
+
+
+def test_vector_length_requires_per_slot_cache(setup):
+    model, cfg = setup
+    cache = model.init_cache(3, 16, cfg, dtype=jnp.float32)  # scalar lengths
+    with pytest.raises(ValueError):
+        model.prefill(jnp.zeros((3, 8), jnp.int32), cache,
+                      length=jnp.asarray([3, 7, 5]))

@@ -88,3 +88,35 @@ def test_engine_with_factorized_model(key):
     toks = jax.random.randint(key, (2, 8), 0, cfg.vocab)
     out = eng.greedy(toks, 4)
     assert out.shape == (2, 4) and int(out.max()) < cfg.vocab
+
+
+def test_trace_replay_drains_and_reports(key):
+    """Poisson trace replay: every request completes, stats are coherent."""
+    from repro.serve import (ContinuousEngine, latency_stats, make_trace,
+                             replay)
+
+    cfg = get_config("paper-tiny").reduced()
+    model = build_model(key, cfg)
+    eng = ContinuousEngine(model, cfg, batch=2, max_len=32, max_prompt_len=8)
+    trace = make_trace(6, seed=3, load=1.0, min_prompt=2, max_prompt=8,
+                       min_new=2, max_new=6, vocab=cfg.vocab)
+    completions, wall = replay(eng, trace)
+    assert len(completions) == 6
+    assert all(1 <= len(c.tokens) <= 6 for c in completions)
+    assert all(c.latency >= c.ttft >= 0 for c in completions)
+    stats = latency_stats(completions, wall)
+    assert stats["requests"] == 6
+    assert stats["generated_tokens"] == sum(len(c.tokens)
+                                            for c in completions)
+    assert stats["tokens_per_s"] > 0
+    assert stats["latency_p95_ms"] >= stats["latency_p50_ms"]
+
+
+def test_trace_is_deterministic():
+    from repro.serve import make_trace
+
+    a = make_trace(5, seed=9, load=0.5)
+    b = make_trace(5, seed=9, load=0.5)
+    for (ta, ra), (tb, rb) in zip(a, b):
+        assert ta == tb and ra.max_new_tokens == rb.max_new_tokens
+        assert (ra.prompt == rb.prompt).all()

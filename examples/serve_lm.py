@@ -1,26 +1,42 @@
 """Continuous-batching serving with a factorized model (paper use case 2,
-serving side).
+serving side) over the paged KV cache.
 
     PYTHONPATH=src python examples/serve_lm.py --reduced --batch 4 \
-        --n-requests 16 --fact-rank 0.5
+        --n-requests 16 --fact-rank 0.5 --shared-prefix 16
 
 Wraps the production serve driver (``repro.launch.serve``): a Poisson trace
 of variable-length prompts is replayed through ``ContinuousEngine`` —
 requests join recyclable decode slots mid-flight under one jitted
 prefill/decode pair — for the dense model and its SVD-factorized copy.
-Prints tokens/s, p50/p95 per-request latency, and greedy-token agreement
-between the two.
+
+The KV cache is **paged** by default: instead of each slot pinning a dense
+``max_len`` lane, all slots share one pool of ``block_size``-token KV
+blocks (``(n_layers, n_blocks, block_size, kv_heads, head_dim)``), and a
+per-slot block table of shape ``(batch, ceil(max_len / block_size))`` maps
+logical position ``p`` to pool row ``table[slot, p // block_size] *
+block_size + p % block_size``.  Requests reserve only the blocks they can
+actually use, so HBM-resident KV bytes track live tokens.  Requests that
+share a system prompt (``--shared-prefix``) reuse the same physical
+prefill blocks: full prompt blocks are keyed by a sha256 hash-chain over
+their tokens and refcounted, and a shared block is immutable — decode
+always extends into a freshly allocated block, never a shared one.
+Greedy outputs are bit-identical to the dense per-slot layout and to the
+one-shot ``generate`` baseline.
+
+Prints tokens/s, p50/p95 per-request latency, HBM-resident KV bytes, and
+greedy-token agreement between dense and factorized weights.
 
 Programmatic use::
 
     from repro.serve import ContinuousEngine
     eng = ContinuousEngine(model, cfg, batch=8, max_len=256,
-                           max_prompt_len=64)
+                           max_prompt_len=64, block_size=16)
     eng.submit(prompt_ids, max_new_tokens=32)                  # greedy
     eng.submit(other_ids, max_new_tokens=16, temperature=0.8,
                stop_ids=(eos_id,))
     for completion in eng.run():
         print(completion.uid, completion.finish_reason, completion.tokens)
+    print(eng.kv_stats())   # peak resident KV bytes, prefix-cache hits
 """
 
 from repro.launch.serve import main as serve_main

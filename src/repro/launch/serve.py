@@ -1,16 +1,23 @@
 """Serving driver: continuous batching with a (optionally factorized) model.
 
     PYTHONPATH=src python -m repro.launch.serve --arch paper-tiny \
-        --batch 8 --max-len 128 --n-requests 32 [--fact-rank 0.5 --solver svd]
+        --batch 8 --max-len 256 --n-requests 32 \
+        [--kv-layout paged --block-size 16] [--fact-rank 0.5 --solver svd]
 
 Replays a Poisson arrival trace of variable-length prompts through the
 continuous-batching engine (``repro.serve.ContinuousEngine``): requests are
 admitted into recyclable slots mid-flight under one jitted prefill + one
-jitted decode step.  Demonstrates the paper's post-training-factorization
-use case end-to-end — the dense model is factorized with SVD *after*
-"training" (here: at init), then served; tokens/s and p50/p95 per-request
-latency for dense vs factorized are printed side by side, plus greedy-token
-agreement between the two.
+jitted decode step.  The default KV layout is **paged** — slots share a
+pool of ``--block-size``-token KV blocks through per-slot block tables,
+with refcounted prefix caching for shared prompt prefixes — so
+HBM-resident KV bytes track live tokens instead of ``batch * max_len``
+(``--kv-layout dense`` restores the per-slot lanes for comparison; both
+layouts produce bit-identical greedy tokens).  ``--shared-prefix N`` gives
+every prompt one common N-token system prefix to exercise the prefix
+cache.  Demonstrates the paper's post-training-factorization use case
+end-to-end — the dense model is factorized with SVD *after* "training"
+(here: at init), then served; tokens/s, p50/p95 latency, and HBM-resident
+KV bytes are printed per variant.
 """
 
 from __future__ import annotations
@@ -23,7 +30,8 @@ import jax
 from repro.configs import get_config
 from repro.core import auto_fact
 from repro.models import build_model
-from repro.serve import bench_trace, format_stats, greedy_agreement, make_trace
+from repro.serve import (bench_trace, format_kv_stats, format_stats,
+                         greedy_agreement, make_trace)
 
 
 def main(argv=None) -> int:
@@ -31,30 +39,52 @@ def main(argv=None) -> int:
     p.add_argument("--arch", default="paper-tiny")
     p.add_argument("--batch", type=int, default=8,
                    help="decode slots (requests in flight)")
-    p.add_argument("--max-len", type=int, default=128)
+    p.add_argument("--max-len", type=int, default=256)
     p.add_argument("--max-prompt-len", type=int, default=64)
     p.add_argument("--n-requests", type=int, default=32)
     p.add_argument("--load", type=float, default=0.5,
                    help="expected request arrivals per decode step")
     p.add_argument("--max-new", type=int, default=32)
+    p.add_argument("--kv-layout", choices=("paged", "dense"),
+                   default="paged")
+    p.add_argument("--block-size", type=int, default=16,
+                   help="tokens per KV block (paged layout)")
+    p.add_argument("--n-blocks", type=int, default=0,
+                   help="KV pool size; 0 = batch * ceil(max_len/block_size)")
+    p.add_argument("--shared-prefix", type=int, default=0,
+                   help="common system-prompt tokens prepended to every "
+                        "request (prefix-cache workload)")
     p.add_argument("--fact-rank", type=float, default=0.0)
     p.add_argument("--solver", default="svd")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--reduced", action="store_true")
     args = p.parse_args(argv)
 
+    min_prompt = 4
+    if not 0 <= args.shared_prefix <= args.max_prompt_len - min_prompt:
+        p.error(f"--shared-prefix must be in [0, {args.max_prompt_len} - "
+                f"{min_prompt}] so prompts still fit --max-prompt-len")
+
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(jax.random.PRNGKey(0), cfg)
     trace = make_trace(args.n_requests, seed=args.seed, load=args.load,
-                       min_prompt=4, max_prompt=args.max_prompt_len,
-                       min_new=4, max_new=args.max_new, vocab=cfg.vocab)
+                       min_prompt=min_prompt,
+                       max_prompt=args.max_prompt_len - args.shared_prefix,
+                       min_new=4, max_new=args.max_new, vocab=cfg.vocab,
+                       shared_prefix=args.shared_prefix)
 
     dims = dict(batch=args.batch, max_len=args.max_len,
-                max_prompt_len=args.max_prompt_len)
+                max_prompt_len=args.max_prompt_len,
+                kv_layout=args.kv_layout)
+    if args.kv_layout == "paged":
+        dims["block_size"] = args.block_size
+        if args.n_blocks:
+            dims["n_blocks"] = args.n_blocks
     dense_done, stats = bench_trace(model, cfg, trace, **dims)
     print(format_stats("dense", stats))
+    print(format_kv_stats("dense", stats))
 
     if args.fact_rank:
         fact, report = auto_fact(model, args.fact_rank, solver=args.solver,
@@ -63,6 +93,7 @@ def main(argv=None) -> int:
         print(report.summary())
         fact_done, fstats = bench_trace(fact, cfg, trace, **dims)
         print(format_stats("factorized", fstats))
+        print(format_kv_stats("factorized", fstats))
         agree = greedy_agreement(dense_done, fact_done)
         print(f"greedy token agreement dense vs factorized: {agree:.1%}")
     return 0

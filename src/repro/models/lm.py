@@ -16,7 +16,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.dist.sharding import constrain_acts
-from repro.nn.attention import Attention, KVCache
+from repro.nn.attention import (Attention, KVCache, PagedKVCache,
+                                UnsupportedCacheError)
 from repro.nn.embedding import Embedding
 from repro.nn.linear import Linear
 from repro.nn.mlp import SwiGLU
@@ -172,6 +173,33 @@ class TransformerLM(Module):
             length=jnp.zeros(lshape, jnp.int32),
         )
 
+    def init_paged_cache(self, batch: int, max_len: int, cfg: ArchConfig, *,
+                         n_blocks: int, block_size: int,
+                         dtype=jnp.bfloat16) -> PagedKVCache:
+        """Shared KV block pool + per-slot block tables.
+
+        Pool k/v carry a leading layer dim (``(n_layers, n_blocks,
+        block_size, kvh, hd)``) and per-layer lengths scan with the blocks;
+        the block table is layer-invariant (every layer mirrors the same
+        allocation) so it is stored once and closed over by the decode
+        scan.  Unmapped table entries hold the sentinel ``n_blocks``."""
+        if cfg.window:
+            raise UnsupportedCacheError(
+                "paged KV cache requires global attention (cfg.window == 0)",
+                roadmap_item="ring-buffer (sliding-window) caches in "
+                "per-slot mode so hymba-family models can serve "
+                "continuously")
+        kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        max_table = -(-max_len // block_size)
+        return PagedKVCache(
+            k=jnp.zeros((self.n_layers, n_blocks, block_size, kvh, hd),
+                        dtype),
+            v=jnp.zeros((self.n_layers, n_blocks, block_size, kvh, hd),
+                        dtype),
+            table=jnp.full((batch, max_table), n_blocks, jnp.int32),
+            length=jnp.zeros((self.n_layers, batch), jnp.int32),
+        )
+
     def prefill(self, tokens: jax.Array, cache: KVCache, *,
                 length: Optional[jax.Array] = None):
         """Returns logits for the LAST position + the filled cache.
@@ -213,9 +241,26 @@ class TransformerLM(Module):
                                    cache.length.shape)
         return logits, new_cache._replace(length=new_len)
 
-    def decode(self, token: jax.Array, cache: KVCache):
-        """token: (batch, 1) -> logits (batch, 1, vocab) + updated cache."""
+    def decode(self, token: jax.Array, cache):
+        """token: (batch, 1) -> logits (batch, 1, vocab) + updated cache.
+
+        Accepts a dense :class:`KVCache` or a :class:`PagedKVCache`; for the
+        paged layout the block table is shared across layers, so only the
+        pool k/v and per-layer lengths ride through the layer scan."""
         x = self.embed(token)
+
+        if isinstance(cache, PagedKVCache):
+            table = cache.table
+
+            def body(x, xs):
+                blk, (k, v, ln) = xs
+                y, c2 = blk.decode(x, PagedKVCache(k, v, table, ln))
+                return y, (c2.k, c2.v, c2.length)
+
+            x, (k, v, ln) = jax.lax.scan(
+                body, x, (self.blocks, (cache.k, cache.v, cache.length)))
+            return self._head(self.final_norm(x)), PagedKVCache(k, v, table,
+                                                                ln)
 
         def body(x, xs):
             blk, c = xs

@@ -5,7 +5,8 @@ from repro.nn.conv import Conv1D, Conv2D, CED1D, CED2D
 from repro.nn.norm import RMSNorm, LayerNorm
 from repro.nn.embedding import Embedding
 from repro.nn.rotary import apply_rope
-from repro.nn.attention import Attention, KVCache
+from repro.nn.attention import (Attention, KVCache, PagedKVCache,
+                                UnsupportedCacheError)
 from repro.nn.mlp import SwiGLU, GeluMLP
 from repro.nn.moe import MoE, MoEOutput
 from repro.nn.ssm import Mamba2Mixer, SSMState
@@ -16,6 +17,7 @@ __all__ = [
     "named_parameters", "param_count", "tree_slice",
     "Linear", "LED", "Conv1D", "Conv2D", "CED1D", "CED2D",
     "RMSNorm", "LayerNorm", "Embedding", "apply_rope",
-    "Attention", "KVCache", "SwiGLU", "GeluMLP", "MoE", "MoEOutput",
+    "Attention", "KVCache", "PagedKVCache", "UnsupportedCacheError",
+    "SwiGLU", "GeluMLP", "MoE", "MoEOutput",
     "Mamba2Mixer", "SSMState", "HybridMixer", "HybridState",
 ]

@@ -25,6 +25,23 @@ from repro.nn.rotary import apply_rope
 NEG_INF = -1e30
 
 
+class UnsupportedCacheError(ValueError):
+    """A model/config's cache family cannot back the requested cache layout
+    or serving mode.
+
+    Lives beside the cache types so the model layer can raise it without
+    depending on ``repro.serve`` (which re-exports it).  Subclasses
+    ``ValueError`` for backwards compatibility with callers that caught the
+    old unstructured errors.  ``roadmap_item`` names the ROADMAP entry that
+    would lift the limitation."""
+
+    def __init__(self, message: str, *, roadmap_item: Optional[str] = None):
+        if roadmap_item:
+            message = f"{message} [ROADMAP: {roadmap_item}]"
+        super().__init__(message)
+        self.roadmap_item = roadmap_item
+
+
 class KVCache(NamedTuple):
     k: jax.Array  # (batch, max_len, kv_heads, head_dim)
     v: jax.Array  # (batch, max_len, kv_heads, head_dim)
@@ -40,6 +57,30 @@ class KVCache(NamedTuple):
             v=jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
             length=jnp.zeros((batch,) if per_slot else (), jnp.int32),
         )
+
+
+class PagedKVCache(NamedTuple):
+    """Paged (block-table) KV layout for continuous batching.
+
+    Instead of each slot reserving a dense ``max_len`` lane, all slots
+    share one pool of fixed-size blocks; a per-slot block table maps
+    logical position ``p`` to pool row ``table[slot, p // bs] * bs +
+    p % bs``.  HBM spent on KV is proportional to live tokens, not to
+    ``batch * max_len``.  Block ownership, refcounts, and prefix sharing
+    live host-side in :mod:`repro.serve.paging`; table entries equal to
+    ``n_blocks`` (one past the last block) are the unmapped sentinel —
+    scatters there drop, gathers clip into lanes the position mask
+    already excludes.
+    """
+
+    k: jax.Array  # (n_blocks, block_size, kv_heads, head_dim)
+    v: jax.Array  # (n_blocks, block_size, kv_heads, head_dim)
+    table: jax.Array  # (batch, max_blocks_per_seq) int32 pool block ids
+    length: jax.Array  # (batch,) int32 — valid positions per slot
+
+    # constructed by ``TransformerLM.init_paged_cache`` (which stacks a
+    # leading n_layers dim onto k/v/length); no bare ``zeros`` here so the
+    # two shape contracts cannot drift apart
 
 
 class Attention(Module):
@@ -227,13 +268,18 @@ class Attention(Module):
             new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v, 0, axis=1)
         return self.o_proj(out), KVCache(new_k, new_v, jnp.asarray(s, jnp.int32))
 
-    def decode(self, x: jax.Array, cache: KVCache) -> tuple[jax.Array, KVCache]:
+    def decode(self, x: jax.Array, cache) -> tuple[jax.Array, "KVCache"]:
         """One-token decode step. x: (batch, 1, dim).
 
-        ``cache.length`` is either a scalar (lock-step batch: every row sits
-        at the same position) or a ``(batch,)`` vector (per-slot mode for
-        continuous batching: each row advances independently, with its own
-        RoPE position, cache write offset, and validity mask)."""
+        With a :class:`KVCache`, ``cache.length`` is either a scalar
+        (lock-step batch: every row sits at the same position) or a
+        ``(batch,)`` vector (per-slot mode for continuous batching: each row
+        advances independently, with its own RoPE position, cache write
+        offset, and validity mask).  With a :class:`PagedKVCache`, K/V rows
+        are scattered to / gathered from the shared block pool through each
+        slot's block table."""
+        if isinstance(cache, PagedKVCache):
+            return self._decode_paged(x, cache)
         b = x.shape[0]
         pos = cache.length
         per_slot = pos.ndim == 1
@@ -276,3 +322,50 @@ class Attention(Module):
         mask = valid[:, None, None, :] if per_slot else valid[None, None, None, :]
         out = self._attend(q, new_k.astype(x.dtype), new_v.astype(x.dtype), mask)
         return self.o_proj(out), KVCache(new_k, new_v, pos + 1)
+
+    def _decode_paged(self, x: jax.Array,
+                      cache: PagedKVCache) -> tuple[jax.Array, PagedKVCache]:
+        """One-token decode against the shared block pool.
+
+        The new K/V row is scattered to ``table[b, pos // bs] * bs +
+        pos % bs`` (``mode='drop'``: slots whose table entry is the
+        unmapped sentinel — finished or never admitted — write nowhere, so
+        a frozen slot can never clobber a block recycled to another
+        request).  Attention then gathers every mapped pool row back into
+        logical order and masks ``kpos > pos``; gathers through sentinel
+        entries clip into masked lanes, and exactly-NEG_INF masking makes
+        their contribution a hard zero, keeping outputs bit-identical to
+        the dense per-slot layout."""
+        if self.window > 0:
+            raise NotImplementedError(
+                "paged decode supports global attention only; sliding-window "
+                "layers use the ring-buffer KVCache path")
+        pos = cache.length  # (b,)
+        positions = pos[:, None].astype(jnp.int32)
+        q, k, v = self._qkv(x, positions=positions, kv_positions=positions)
+        nb, bs, kvh, hd = cache.k.shape
+        max_table = cache.table.shape[1]
+        pool_k = cache.k.reshape(nb * bs, kvh, hd)
+        pool_v = cache.v.reshape(nb * bs, kvh, hd)
+        # a slot frozen at pos == max_table*bs (cache_full eviction) would
+        # index one past the table; clamp the lookup and route its write to
+        # the sentinel row explicitly — take_along_axis's out-of-bounds fill
+        # (INT32_MIN) times bs wraps around int32 to a VALID row otherwise
+        blk = jnp.take_along_axis(
+            cache.table, jnp.minimum(pos // bs, max_table - 1)[:, None],
+            axis=1)[:, 0]
+        row_new = jnp.where(pos < max_table * bs, blk * bs + pos % bs,
+                            nb * bs)  # (b,) flat pool row for this token
+        pool_k = pool_k.at[row_new].set(k[:, 0].astype(pool_k.dtype),
+                                        mode="drop")
+        pool_v = pool_v.at[row_new].set(v[:, 0].astype(pool_v.dtype),
+                                        mode="drop")
+        kpos = jnp.arange(max_table * bs)
+        rows = cache.table[:, kpos // bs] * bs + (kpos % bs)[None, :]
+        gk = pool_k[rows].astype(x.dtype)  # (b, max_table*bs, kvh, hd)
+        gv = pool_v[rows].astype(x.dtype)
+        valid = kpos[None, :] <= pos[:, None]
+        out = self._attend(q, gk, gv, valid[:, None, None, :])
+        return self.o_proj(out), PagedKVCache(
+            pool_k.reshape(nb, bs, kvh, hd), pool_v.reshape(nb, bs, kvh, hd),
+            cache.table, pos + 1)

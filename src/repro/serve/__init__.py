@@ -1,34 +1,65 @@
-"""Serving subsystem: continuous batching over factorized (or dense) models.
+"""Serving subsystem: continuous batching over a paged KV cache.
 
-Three layers:
+Four layers:
 
 * ``repro.serve.engine`` — device execution.  ``generate`` (one-shot
   prefill + scan decode, the equivalence baseline), ``Engine`` (lock-step
   fixed batch, kept for SSM/encdec caches), and ``ContinuousEngine``: a
   fixed slot batch where requests join and leave mid-flight under ONE
-  jitted prefill and ONE jitted decode step.  Prompts are right-padded to
-  a fixed prefill width and spliced into per-slot KV-cache lanes with
-  ``lax.dynamic_update_slice``; per-request sampling params (temperature,
-  max_new_tokens, stop ids) ride along as batched arrays so stop/evict
-  decisions happen in-graph.
+  jitted prefill and ONE jitted decode step.  The default KV layout is
+  **paged**: all slots share a pool of ``block_size``-token KV blocks
+  (``PagedKVCache.k/v: (n_layers, n_blocks, block_size, kv_heads,
+  head_dim)``) and each slot maps logical position ``p`` to pool row
+  ``table[slot, p // block_size] * block_size + p % block_size`` through
+  its block-table row (``table: (batch, ceil(max_len / block_size))``
+  int32, sentinel ``n_blocks`` for unmapped entries).  Decode is a
+  gather/scatter against the table inside the same single jitted step;
+  HBM spent on KV is proportional to live tokens, not ``batch *
+  max_len``.  ``kv_layout="dense"`` keeps the original per-slot lanes as
+  the bit-exactness baseline.
+* ``repro.serve.paging`` — host block bookkeeping.  Refcounted
+  ``BlockAllocator`` over the pool, ``PrefixCache`` keyed by sha256
+  hash-chains over *full* prompt blocks (``key_i = sha256(key_{i-1} ||
+  block_tokens)``) so requests sharing a system prompt reuse the same
+  refcounted prefill blocks (shared blocks are immutable; a request
+  extends past them into freshly allocated blocks — copy-on-extend
+  without the copy), and ``PagedCacheManager``, which reserves
+  ``ceil(min(prompt_len + max_new, max_len) / block_size)`` blocks per
+  request at admission so decode can never run out of blocks
+  mid-request.
 * ``repro.serve.scheduler`` — host lifecycle.  FIFO pending queue,
-  admit -> prefill -> decode -> finish/evict, slot recycling.
-* ``repro.serve.trace`` — Poisson arrival traces, replay, latency stats.
+  admit -> prefill -> decode -> finish/evict, slot recycling.  When the
+  block pool cannot hold the head request's reservation, admission
+  defers (head-of-line, so FIFO order is preserved and nothing starves)
+  and resumes as finished requests free their blocks.
+* ``repro.serve.trace`` — Poisson arrival traces (optionally with a
+  shared system-prompt prefix), replay, latency + KV-memory stats.
+
+Greedy outputs are bit-identical across ``generate``, ``Engine``, and
+both ``ContinuousEngine`` layouts — enforced by the differential harness
+in ``tests/test_paging.py``.
 
 Quick use::
 
     eng = ContinuousEngine(model, cfg, batch=8, max_len=256,
-                           max_prompt_len=64)
+                           max_prompt_len=64, block_size=16)
     eng.submit([1, 2, 3], max_new_tokens=16)           # greedy
     eng.submit(prompt2, max_new_tokens=8, temperature=0.7, stop_ids=(0,))
     completions = eng.run()                            # drain the queue
+    print(eng.kv_stats())  # peak HBM-resident KV bytes, prefix hits, ...
 """
 
+from repro.nn.attention import UnsupportedCacheError
 from repro.serve.engine import ContinuousEngine, Engine, generate
+from repro.serve.paging import (BlockAllocator, PagedCacheManager,
+                                PrefixCache, chain_keys)
 from repro.serve.scheduler import Completion, Request, Scheduler
-from repro.serve.trace import (bench_trace, format_stats, greedy_agreement,
-                               latency_stats, make_trace, replay)
+from repro.serve.trace import (bench_trace, format_kv_stats, format_stats,
+                               greedy_agreement, latency_stats, make_trace,
+                               replay)
 
 __all__ = ["Engine", "ContinuousEngine", "generate", "Request", "Completion",
-           "Scheduler", "make_trace", "replay", "latency_stats",
-           "format_stats", "bench_trace", "greedy_agreement"]
+           "Scheduler", "BlockAllocator", "PagedCacheManager", "PrefixCache",
+           "UnsupportedCacheError", "chain_keys", "make_trace", "replay",
+           "latency_stats", "format_stats", "format_kv_stats", "bench_trace",
+           "greedy_agreement"]

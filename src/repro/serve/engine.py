@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.nn.attention import UnsupportedCacheError
+from repro.serve.paging import PagedCacheManager
 from repro.serve.scheduler import Completion, Request, Scheduler
 
 
@@ -120,36 +122,86 @@ class ContinuousEngine:
 
     Requests join and leave mid-flight: a prefill runs on a single-row lane
     (prompts right-padded to ``max_prompt_len`` so the jit compiles once),
-    the lane is spliced into the batched cache at the free slot with
-    ``lax.dynamic_update_slice``, and the batched decode step advances every
-    active slot at its own position.  Stop-token / max-token / cache-full
-    eviction is computed in-graph from batched per-request params; the host
-    scheduler only mirrors the lifecycle and collects tokens.
+    the lane's K/V rows are committed into the batched cache at the free
+    slot, and the batched decode step advances every active slot at its own
+    position.  Stop-token / max-token / cache-full eviction is computed
+    in-graph from batched per-request params; the host scheduler only
+    mirrors the lifecycle and collects tokens.
+
+    Two KV layouts (``kv_layout``):
+
+    * ``"paged"`` (default) — all slots share one pool of
+      ``block_size``-token KV blocks (:class:`repro.nn.attention.
+      PagedKVCache`); a host-side :class:`~repro.serve.paging.
+      PagedCacheManager` reserves ``ceil(min(prompt+max_new, max_len) /
+      block_size)`` blocks per request at admission (so decode can never
+      exhaust the pool mid-request), shares full prompt blocks between
+      requests with equal prefixes (hash-keyed, refcounted), and defers
+      FIFO admission while the pool is out of blocks.  HBM spent on KV is
+      proportional to live tokens instead of ``batch * max_len``.
+    * ``"dense"`` — the original per-slot layout: every slot reserves a
+      dense ``max_len`` lane, spliced with ``lax.dynamic_update_slice``.
+      Kept as the bit-exactness baseline and for the benchmark comparison.
 
     Requires a global-attention KV cache (``cfg.window == 0``) — ring-buffer
-    lanes cannot be slot-recycled yet (see ROADMAP).
+    lanes cannot be slot-recycled or paged yet (see ROADMAP).
     """
 
     def __init__(self, model, cfg, *, batch: int, max_len: int,
                  max_prompt_len: int, max_stop_ids: int = 4,
-                 cache_dtype=jnp.float32, seed: int = 0):
+                 cache_dtype=jnp.float32, seed: int = 0,
+                 kv_layout: str = "paged", block_size: int = 16,
+                 n_blocks: Optional[int] = None):
         if cfg.window:
-            raise ValueError(
-                "continuous batching needs global attention (window=0); "
-                "ring-buffer caches cannot be slot-recycled yet")
+            raise UnsupportedCacheError(
+                "continuous batching needs a global-attention KV cache "
+                f"(cfg.window == 0, got {cfg.window}); sliding-window "
+                "ring-buffer lanes cannot be slot-recycled or paged yet",
+                roadmap_item="ring-buffer (sliding-window) caches in "
+                "per-slot mode so hymba-family models can serve "
+                "continuously")
         if not 0 < max_prompt_len < max_len:
             raise ValueError("need 0 < max_prompt_len < max_len")
+        if kv_layout not in ("paged", "dense"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
         self.model, self.cfg = model, cfg
         self.batch, self.max_len = batch, max_len
         self.max_prompt_len, self.max_stop_ids = max_prompt_len, max_stop_ids
-        try:
-            self.cache = model.init_cache(batch, max_len, cfg,
-                                          dtype=cache_dtype, per_slot=True)
-        except TypeError:
-            raise ValueError(
-                f"{type(model).__name__} has no per-slot KV cache; "
-                "continuous batching supports attention-KV models only")
-        self._lane0 = model.init_cache(1, max_len, cfg, dtype=cache_dtype)
+        self.kv_layout, self.cache_dtype = kv_layout, jnp.dtype(cache_dtype)
+        if kv_layout == "paged":
+            if block_size < 1:
+                raise ValueError("need block_size >= 1")
+            self.block_size = block_size
+            self.n_blocks = (batch * (-(-max_len // block_size))
+                             if n_blocks is None else n_blocks)
+            if not hasattr(model, "init_paged_cache"):
+                raise UnsupportedCacheError(
+                    f"{type(model).__name__} has no paged KV cache; the "
+                    "paged layout supports attention-KV models only",
+                    roadmap_item="extend per-slot state to Mamba conv/ssm "
+                    "states and Whisper enc caches")
+            self.cache = model.init_paged_cache(
+                batch, max_len, cfg, n_blocks=self.n_blocks,
+                block_size=block_size, dtype=cache_dtype)
+            self.manager = PagedCacheManager(
+                n_blocks=self.n_blocks, block_size=block_size, batch=batch,
+                max_len=max_len)
+            self._table_dirty = False
+            lane_len = max_prompt_len
+        else:
+            try:
+                self.cache = model.init_cache(batch, max_len, cfg,
+                                              dtype=cache_dtype,
+                                              per_slot=True)
+            except TypeError:
+                raise UnsupportedCacheError(
+                    f"{type(model).__name__} has no per-slot KV cache; "
+                    "continuous batching supports attention-KV models only",
+                    roadmap_item="extend per-slot state to Mamba conv/ssm "
+                    "states and Whisper enc caches")
+            self.manager = None
+            lane_len = max_len
+        self._lane0 = model.init_cache(1, lane_len, cfg, dtype=cache_dtype)
         self.state = _SlotArrays(
             tok=jnp.zeros((batch,), jnp.int32),
             active=jnp.zeros((batch,), bool),
@@ -167,13 +219,7 @@ class ContinuousEngine:
             first = _sample(logits[:, 0], temp[None], key)[0]
             return first, lane
 
-        def admit_fn(cache, state, lane, slot, length, first, temp,
-                     max_new, stop_row):
-            k = jax.lax.dynamic_update_slice(cache.k, lane.k,
-                                             (0, slot, 0, 0, 0))
-            v = jax.lax.dynamic_update_slice(cache.v, lane.v,
-                                             (0, slot, 0, 0, 0))
-            ln = cache.length.at[:, slot].set(length)
+        def bind_state(state, slot, length, first, temp, max_new, stop_row):
             done0 = (jnp.any(first == stop_row) | (max_new <= 1)
                      | (length >= max_len))
             state = state._replace(
@@ -184,7 +230,37 @@ class ContinuousEngine:
                 max_new=state.max_new.at[slot].set(max_new),
                 stop_ids=state.stop_ids.at[slot].set(stop_row),
             )
+            return state, done0
+
+        def admit_fn(cache, state, lane, slot, length, first, temp,
+                     max_new, stop_row):
+            k = jax.lax.dynamic_update_slice(cache.k, lane.k,
+                                             (0, slot, 0, 0, 0))
+            v = jax.lax.dynamic_update_slice(cache.v, lane.v,
+                                             (0, slot, 0, 0, 0))
+            ln = cache.length.at[:, slot].set(length)
+            state, done0 = bind_state(state, slot, length, first, temp,
+                                      max_new, stop_row)
             return cache._replace(k=k, v=v, length=ln), state, done0
+
+        def commit_fn(cache, state, lane, dst, slot, length, first, temp,
+                      max_new, stop_row):
+            # scatter the lane's first `length` K/V rows into the pool
+            # blocks picked by the allocator; `dst` points cached-prefix and
+            # padding positions at the out-of-range sentinel row, so
+            # mode='drop' leaves shared blocks untouched
+            L, nb, bs = cache.k.shape[:3]
+            tail = cache.k.shape[3:]
+            pool_k = cache.k.reshape(L, nb * bs, *tail)
+            pool_v = cache.v.reshape(L, nb * bs, *tail)
+            pool_k = pool_k.at[:, dst].set(lane.k[:, 0], mode="drop")
+            pool_v = pool_v.at[:, dst].set(lane.v[:, 0], mode="drop")
+            ln = cache.length.at[:, slot].set(length)
+            state, done0 = bind_state(state, slot, length, first, temp,
+                                      max_new, stop_row)
+            return cache._replace(k=pool_k.reshape(cache.k.shape),
+                                  v=pool_v.reshape(cache.v.shape),
+                                  length=ln), state, done0
 
         def decode_fn(cache, state, key):
             logits, new_cache = model.decode(state.tok[:, None], cache)
@@ -202,7 +278,8 @@ class ContinuousEngine:
             return new_cache._replace(length=length), state, nxt, done
 
         self._prefill = jax.jit(prefill_fn)
-        self._admit = jax.jit(admit_fn, donate_argnums=(0, 1))
+        self._admit = jax.jit(commit_fn if self.manager is not None
+                              else admit_fn, donate_argnums=(0, 1))
         self._decode = jax.jit(decode_fn, donate_argnums=(0, 1))
 
     # -- request intake ------------------------------------------------------
@@ -229,7 +306,19 @@ class ContinuousEngine:
                 f"{self.max_prompt_len}")
         if len(req.stop_ids) > self.max_stop_ids:
             raise ValueError(f"more than {self.max_stop_ids} stop ids")
+        if self.manager is not None:
+            need = self.manager.blocks_needed(self._total_tokens(req))
+            if need > self.n_blocks:
+                raise ValueError(
+                    f"request needs {need} KV blocks but the pool has only "
+                    f"{self.n_blocks}; raise n_blocks or lower "
+                    "max_new_tokens")
         return self.scheduler.submit(req)
+
+    def _total_tokens(self, req: Request) -> int:
+        """Worst-case cache positions a request can occupy (reservation)."""
+        return min(int(req.prompt.size) + int(req.max_new_tokens),
+                   self.max_len)
 
     def _next_key(self) -> jax.Array:
         self._tick += 1
@@ -237,11 +326,29 @@ class ContinuousEngine:
 
     # -- serving loop --------------------------------------------------------
 
+    def _next_admission(self):
+        """FIFO head-of-line admission; the paged layout additionally gates
+        on the head request's block reservation fitting the free pool."""
+        if self.manager is None:
+            return self.scheduler.next_admission()
+        return self.scheduler.next_admission(
+            admissible=lambda r: self.manager.can_admit(
+                r.prompt, self._total_tokens(r)))
+
+    def _finish(self, slot: int, cache_pos: int) -> Completion:
+        """Evict a finished slot: classify, release its KV blocks (paged),
+        and hand the slot back to the scheduler."""
+        reason = self.scheduler.finish_reason(slot, cache_pos, self.max_len)
+        if self.manager is not None:
+            self.manager.release(slot)
+            self._table_dirty = True
+        return self.scheduler.finish(slot, reason)
+
     def step(self) -> list:
         """Admit pending requests into free slots, then run one batched
         decode step.  Returns the :class:`Completion`s finished this step."""
         finished = []
-        while (adm := self.scheduler.next_admission()) is not None:
+        while (adm := self._next_admission()) is not None:
             slot, req = adm
             toks = np.zeros((1, self.max_prompt_len), np.int32)
             toks[0, :req.prompt.size] = req.prompt
@@ -251,20 +358,31 @@ class ContinuousEngine:
                 jnp.asarray(toks), self._lane0,
                 jnp.asarray(req.prompt.size, jnp.int32),
                 jnp.asarray(req.temperature, jnp.float32), self._next_key())
-            self.cache, self.state, done0 = self._admit(
-                self.cache, self.state, lane, jnp.asarray(slot, jnp.int32),
-                jnp.asarray(req.prompt.size, jnp.int32), first,
-                jnp.asarray(req.temperature, jnp.float32),
-                jnp.asarray(req.max_new_tokens, jnp.int32),
-                jnp.asarray(stop_row))
+            args = (jnp.asarray(slot, jnp.int32),
+                    jnp.asarray(req.prompt.size, jnp.int32), first,
+                    jnp.asarray(req.temperature, jnp.float32),
+                    jnp.asarray(req.max_new_tokens, jnp.int32),
+                    jnp.asarray(stop_row))
+            if self.manager is not None:
+                _, dst = self.manager.admit(slot, req.prompt,
+                                            self._total_tokens(req),
+                                            self.max_prompt_len)
+                self._table_dirty = True
+                self.cache, self.state, done0 = self._admit(
+                    self.cache, self.state, lane, jnp.asarray(dst), *args)
+            else:
+                self.cache, self.state, done0 = self._admit(
+                    self.cache, self.state, lane, *args)
             self.scheduler.bind(slot, req, int(first))
             if bool(done0):
-                reason = self.scheduler.finish_reason(
-                    slot, req.prompt.size, self.max_len)
-                finished.append(self.scheduler.finish(slot, reason))
+                finished.append(self._finish(slot, req.prompt.size))
 
         running = self.scheduler.running_slots()
         if running:
+            if self.manager is not None and self._table_dirty:
+                self.cache = self.cache._replace(
+                    table=jnp.asarray(self.manager.tables))
+                self._table_dirty = False
             self.cache, self.state, nxt, done = self._decode(
                 self.cache, self.state, self._next_key())
             nxt_np, done_np = np.asarray(nxt), np.asarray(done)
@@ -272,10 +390,33 @@ class ContinuousEngine:
             for slot in running:
                 self.scheduler.append_token(slot, nxt_np[slot])
                 if done_np[slot]:
-                    reason = self.scheduler.finish_reason(
-                        slot, int(pos_np[slot]), self.max_len)
-                    finished.append(self.scheduler.finish(slot, reason))
+                    finished.append(self._finish(slot, int(pos_np[slot])))
         return finished
+
+    # -- introspection -------------------------------------------------------
+
+    def kv_stats(self) -> dict:
+        """HBM accounting for the KV cache (bytes, both layouts).
+
+        ``kv_allocated_bytes`` is what the layout reserves up front;
+        ``kv_peak_resident_bytes`` is the high-water mark of bytes holding
+        live tokens — for the dense layout the two coincide (every slot
+        pins a ``max_len`` lane), for the paged layout the peak tracks
+        blocks actually in use, which is what a right-sized pool would
+        need."""
+        alloc = 2 * self.cache.k.size * self.cache.k.dtype.itemsize
+        if self.manager is None:
+            return {"kv_layout": "dense", "kv_allocated_bytes": alloc,
+                    "kv_peak_resident_bytes": alloc}
+        block_bytes = 2 * (self.cache.k.size // self.n_blocks
+                           ) * self.cache.k.dtype.itemsize
+        a = self.manager.allocator
+        return {"kv_layout": "paged", "kv_allocated_bytes": alloc,
+                "kv_peak_resident_bytes": a.peak_in_use * block_bytes,
+                "block_size": self.block_size, "n_blocks": self.n_blocks,
+                "peak_blocks_in_use": a.peak_in_use,
+                "blocks_in_use": a.n_in_use,
+                "prefix_hit_tokens": self.manager.prefix_hit_tokens}
 
     def run(self, max_steps: Optional[int] = None) -> list:
         """Step until every submitted request has finished."""
@@ -288,4 +429,5 @@ class ContinuousEngine:
         return sorted(out, key=lambda c: c.uid)
 
 
-__all__ = ["generate", "Engine", "ContinuousEngine", "Request", "Completion"]
+__all__ = ["generate", "Engine", "ContinuousEngine", "Request", "Completion",
+           "UnsupportedCacheError"]

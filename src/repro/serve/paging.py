@@ -1,0 +1,211 @@
+"""Paged KV-cache management: block allocator, prefix cache, block tables.
+
+Host-side bookkeeping for the paged KV layout (pure Python/numpy — no jax
+here, mirroring the engine/scheduler split).  The device side is a shared
+pool of ``n_blocks`` fixed-size KV blocks per layer
+(:class:`repro.nn.attention.PagedKVCache`); this module decides which pool
+blocks each request owns:
+
+* :class:`BlockAllocator` — free-list + per-block refcounts.  ``alloc``
+  hands out an exclusively-owned block, ``fork`` adds a reader to a shared
+  block, ``free`` drops one reference and returns the block to the free
+  list when the count hits zero.
+* :class:`PrefixCache` — hash-chained keys over *full* prompt blocks
+  (``key_i = sha256(key_{i-1} || tokens[i*bs:(i+1)*bs])``) mapped to pool
+  block ids, so requests sharing a system prompt reuse the same physical
+  prefill blocks.  Only immutable full blocks are ever shared: a prompt's
+  partial last block and all decode-time blocks are freshly allocated, so
+  a cache hit can never alias a block that a live writer mutates
+  (copy-on-extend by construction — extension always lands in a fresh
+  block at a block boundary, no copy needed).  Entries are evicted the
+  moment their block's refcount reaches zero; keeping freed blocks warm
+  under an LRU budget is a ROADMAP follow-on.
+* :class:`PagedCacheManager` — ties both to per-slot block tables
+  (``(batch, max_blocks_per_seq)`` int32, device sentinel ``n_blocks`` for
+  unmapped entries so stale scatters drop and stale gathers clip into
+  masked lanes) and to admission: a request reserves
+  ``ceil(min(prompt_len + max_new, max_len) / block_size)`` blocks up
+  front (minus prefix hits), so decode can never run out of blocks
+  mid-request and FIFO admission defers — never skips — when the pool is
+  exhausted.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+def chain_keys(tokens: np.ndarray, block_size: int) -> List[bytes]:
+    """Hash-chained prefix keys, one per *full* block of ``tokens``.
+
+    ``keys[i]`` commits to tokens ``[0, (i+1)*block_size)``, so equal keys
+    imply equal full prefixes and a block is only ever hit together with
+    every block before it."""
+    tokens = np.ascontiguousarray(np.asarray(tokens, np.int32))
+    keys, h = [], b""
+    for i in range(len(tokens) // block_size):
+        h = hashlib.sha256(
+            h + tokens[i * block_size:(i + 1) * block_size].tobytes()).digest()
+        keys.append(h)
+    return keys
+
+
+class BlockAllocator:
+    """Refcounted free-list over a fixed pool of KV blocks."""
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks < 1 or block_size < 1:
+            raise ValueError("need n_blocks >= 1 and block_size >= 1")
+        self.n_blocks, self.block_size = n_blocks, block_size
+        self._free = list(range(n_blocks - 1, -1, -1))  # stack; pops 0,1,2,..
+        self.refcount = np.zeros(n_blocks, np.int32)
+        self.peak_in_use = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_in_use(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def alloc(self) -> int:
+        """Take an exclusively-owned block (refcount 1) off the free list."""
+        if not self._free:
+            raise RuntimeError("out of KV blocks")
+        bid = self._free.pop()
+        self.refcount[bid] = 1
+        self.peak_in_use = max(self.peak_in_use, self.n_in_use)
+        return bid
+
+    def fork(self, bid: int) -> None:
+        """Add a reader to a live block (prefix sharing)."""
+        if self.refcount[bid] <= 0:
+            raise RuntimeError(f"fork of free block {bid}")
+        self.refcount[bid] += 1
+
+    def free(self, bid: int) -> int:
+        """Drop one reference; returns the remaining count (0 => recycled)."""
+        if self.refcount[bid] <= 0:
+            raise RuntimeError(f"double free of block {bid}")
+        self.refcount[bid] -= 1
+        rc = int(self.refcount[bid])
+        if rc == 0:
+            self._free.append(bid)
+        return rc
+
+
+class PrefixCache:
+    """chain-key -> block id map with reverse lookup for eviction."""
+
+    def __init__(self):
+        self._by_key: Dict[bytes, int] = {}
+        self._by_block: Dict[int, bytes] = {}
+
+    def __len__(self) -> int:
+        return len(self._by_key)
+
+    def get(self, key: bytes) -> Optional[int]:
+        return self._by_key.get(key)
+
+    def put(self, key: bytes, bid: int) -> None:
+        self._by_key[key] = bid
+        self._by_block[bid] = key
+
+    def drop_block(self, bid: int) -> None:
+        """Evict the entry for a block returning to the free list."""
+        key = self._by_block.pop(bid, None)
+        if key is not None:
+            del self._by_key[key]
+
+
+class PagedCacheManager:
+    """Block tables + reservation-based admission over one allocator.
+
+    Owns the host mirror of the per-slot block tables the jitted decode
+    gathers through; the engine re-uploads it whenever a slot is admitted
+    or released."""
+
+    def __init__(self, *, n_blocks: int, block_size: int, batch: int,
+                 max_len: int):
+        self.allocator = BlockAllocator(n_blocks, block_size)
+        self.prefix = PrefixCache()
+        self.block_size = block_size
+        self.max_table = -(-max_len // block_size)
+        self.sentinel = n_blocks  # out-of-range block id => unmapped
+        self.tables = np.full((batch, self.max_table), self.sentinel,
+                              np.int32)
+        self._owned: Dict[int, List[int]] = {}  # slot -> owned block ids
+        self.prefix_hit_tokens = 0  # prompt tokens served from shared blocks
+
+    def blocks_needed(self, total_tokens: int) -> int:
+        return -(-total_tokens // self.block_size)
+
+    def _plan(self, prompt: np.ndarray,
+              total_tokens: int) -> Tuple[List[bytes], int, int]:
+        """(chain keys over full prompt blocks, #prefix hits, #blocks)."""
+        keys = chain_keys(prompt, self.block_size)
+        n_hit = 0
+        for k in keys:
+            if self.prefix.get(k) is None:
+                break
+            n_hit += 1
+        return keys, n_hit, self.blocks_needed(total_tokens)
+
+    def can_admit(self, prompt: np.ndarray, total_tokens: int) -> bool:
+        keys, n_hit, n_need = self._plan(prompt, total_tokens)
+        return n_need - n_hit <= self.allocator.n_free
+
+    def admit(self, slot: int, prompt: np.ndarray, total_tokens: int,
+              max_prompt_len: int) -> Tuple[int, np.ndarray]:
+        """Reserve blocks for one request and map them into ``slot``.
+
+        Returns ``(n_cached_tokens, dst_rows)``: the number of leading
+        prompt tokens already resident in shared blocks, and a
+        ``(max_prompt_len,)`` int32 array of flat pool rows for the prefill
+        scatter — cached and padding positions point at the out-of-range
+        sentinel row so the jitted ``mode='drop'`` scatter skips them (a
+        hit block is never written, even with identical bytes)."""
+        assert slot not in self._owned, f"slot {slot} already mapped"
+        keys, n_hit, n_need = self._plan(prompt, total_tokens)
+        if n_need - n_hit > self.allocator.n_free:
+            raise RuntimeError("admit() without free blocks; call can_admit")
+        blocks = []
+        for k in keys[:n_hit]:
+            bid = self.prefix.get(k)
+            self.allocator.fork(bid)
+            blocks.append(bid)
+        blocks += [self.allocator.alloc() for _ in range(n_need - n_hit)]
+        # freshly-filled full prompt blocks become hittable for later
+        # requests; their content is immutable once the prefill commits
+        for i in range(n_hit, len(keys)):
+            self.prefix.put(keys[i], blocks[i])
+        self.tables[slot] = self.sentinel
+        self.tables[slot, :n_need] = blocks
+        self._owned[slot] = blocks
+        cached = n_hit * self.block_size
+        self.prefix_hit_tokens += cached
+        bs = self.block_size
+        dst = np.full((max_prompt_len,), self.sentinel * bs, np.int32)
+        p = np.arange(cached, len(prompt))
+        if p.size:
+            dst[p] = np.asarray(blocks, np.int32)[p // bs] * bs + p % bs
+        return cached, dst
+
+    def release(self, slot: int) -> None:
+        """Return a finished slot's references; evict dead prefix entries."""
+        for bid in self._owned.pop(slot):
+            if self.allocator.free(bid) == 0:
+                self.prefix.drop_block(bid)
+        self.tables[slot] = self.sentinel
+
+    @property
+    def fully_free(self) -> bool:
+        return self.allocator.n_free == self.allocator.n_blocks
+
+
+__all__ = ["BlockAllocator", "PagedCacheManager", "PrefixCache",
+           "chain_keys"]

@@ -80,6 +80,8 @@ class Scheduler:
         self.n_slots = n_slots
         self.pending: deque = deque()
         self.slots: list = [None] * n_slots
+        # bounded admission log (uids, FIFO order) for tests/introspection
+        self.admitted: deque = deque(maxlen=1024)
 
     # -- queue ---------------------------------------------------------------
 
@@ -110,10 +112,18 @@ class Scheduler:
                 return i
         return None
 
-    def next_admission(self) -> Optional[Tuple[int, Request]]:
-        """(slot, request) for the next admissible pending request."""
+    def next_admission(self, admissible=None) -> Optional[Tuple[int, Request]]:
+        """(slot, request) for the next admissible pending request.
+
+        ``admissible`` (e.g. the paged engine's free-block reservation
+        check) gates the HEAD of the queue only: if the head request cannot
+        be admitted, nothing is — later requests never jump the queue, so
+        admission order always equals submission order and a large request
+        at the head cannot be starved by a stream of small ones."""
         slot = self.free_slot()
         if slot is None or not self.pending:
+            return None
+        if admissible is not None and not admissible(self.pending[0]):
             return None
         return slot, self.pending.popleft()
 
@@ -122,6 +132,7 @@ class Scheduler:
     def bind(self, slot: int, request: Request, first_token: int) -> None:
         """Attach an admitted request to its slot (prefill done)."""
         assert self.slots[slot] is None, f"slot {slot} busy"
+        self.admitted.append(request.uid)
         self.slots[slot] = _Slot(request=request, tokens=[int(first_token)],
                                  first_token_at=time.monotonic())
 

@@ -24,16 +24,26 @@ def make_trace(n_requests: int, *, seed: int = 0, load: float = 0.25,
                min_prompt: int = 4, max_prompt: int = 64,
                min_new: int = 4, max_new: int = 32,
                temperature: float = 0.0, vocab: int = 256,
+               shared_prefix: int = 0,
                ) -> List[Tuple[float, Request]]:
-    """Sample a reproducible trace of variable-length requests."""
+    """Sample a reproducible trace of variable-length requests.
+
+    ``shared_prefix > 0`` prepends one common random prefix of that many
+    tokens to every prompt — the shared-system-prompt workload the paged
+    engine's prefix cache serves from a single refcounted block set."""
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / max(load, 1e-6), n_requests)
     arrivals = np.cumsum(gaps)
+    prefix = (rng.integers(0, vocab, shared_prefix).astype(np.int32)
+              if shared_prefix else None)
     trace = []
     for t in arrivals:
         plen = int(rng.integers(min_prompt, max_prompt + 1))
+        prompt = rng.integers(0, vocab, plen).astype(np.int32)
+        if prefix is not None:
+            prompt = np.concatenate([prefix, prompt])
         trace.append((float(t), Request(
-            prompt=rng.integers(0, vocab, plen).astype(np.int32),
+            prompt=prompt,
             max_new_tokens=int(rng.integers(min_new, max_new + 1)),
             temperature=temperature,
         )))
@@ -82,17 +92,21 @@ def latency_stats(completions: List[Completion], wall: float) -> dict:
 
 def bench_trace(model, cfg, trace: List[Tuple[float, Request]], *,
                 batch: int, max_len: int, max_prompt_len: int,
-                ) -> Tuple[List[Completion], dict]:
+                **engine_kwargs) -> Tuple[List[Completion], dict]:
     """Build a ContinuousEngine, warm the jitted prefill/decode pair, then
-    replay ``trace`` — the shared body of the serve driver and benchmark."""
+    replay ``trace`` — the shared body of the serve driver and benchmark.
+    Extra kwargs (``kv_layout``, ``block_size``, ``n_blocks``, ...) pass
+    through to the engine; its ``kv_stats()`` are merged into the stats."""
     from repro.serve.engine import ContinuousEngine
 
     engine = ContinuousEngine(model, cfg, batch=batch, max_len=max_len,
-                              max_prompt_len=max_prompt_len)
+                              max_prompt_len=max_prompt_len, **engine_kwargs)
     engine.submit(np.zeros(2, np.int32), max_new_tokens=2)  # compile warmup
     engine.run()
     completions, wall = replay(engine, trace)
-    return completions, latency_stats(completions, wall)
+    stats = latency_stats(completions, wall)
+    stats.update(engine.kv_stats())
+    return completions, stats
 
 
 def greedy_agreement(a: List[Completion], b: List[Completion]) -> float:
@@ -112,5 +126,18 @@ def format_stats(label: str, stats: dict) -> str:
             f"({stats['requests']} reqs, {stats['generated_tokens']} tok)")
 
 
+def format_kv_stats(label: str, stats: dict) -> str:
+    """One-line render of ``ContinuousEngine.kv_stats()`` (merged into
+    ``bench_trace`` stats) — the single formatter for every driver."""
+    extra = ""
+    if stats["kv_layout"] == "paged":
+        extra = (f"   ({stats['peak_blocks_in_use']}/{stats['n_blocks']} "
+                 f"blocks x {stats['block_size']} tok, "
+                 f"{stats['prefix_hit_tokens']} prefix-hit tok)")
+    return (f"{label:11s}: KV[{stats['kv_layout']}] resident "
+            f"{stats['kv_peak_resident_bytes'] / 1024:8.1f} KiB / allocated "
+            f"{stats['kv_allocated_bytes'] / 1024:8.1f} KiB{extra}")
+
+
 __all__ = ["make_trace", "replay", "latency_stats", "format_stats",
-           "bench_trace", "greedy_agreement"]
+           "format_kv_stats", "bench_trace", "greedy_agreement"]

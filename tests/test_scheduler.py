@@ -13,7 +13,8 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import ContinuousEngine, Request, Scheduler, generate
+from repro.serve import (ContinuousEngine, Request, Scheduler,
+                         UnsupportedCacheError, generate)
 
 
 @pytest.fixture(scope="module")
@@ -191,10 +192,60 @@ def test_continuous_with_factorized_model(setup):
 
 
 def test_window_model_rejected(setup):
+    """Sliding-window configs raise the structured UnsupportedCacheError
+    (still a ValueError for old callers) naming the ring-buffer ROADMAP
+    item."""
     model, cfg = setup
-    with pytest.raises(ValueError):
+    with pytest.raises(UnsupportedCacheError) as ei:
         ContinuousEngine(model, cfg.replace(window=8), batch=2, max_len=32,
                          max_prompt_len=12)
+    assert "ring-buffer" in str(ei.value)
+    assert ei.value.roadmap_item is not None
+
+
+def test_out_of_blocks_admission_defers_fifo(setup):
+    """Deliberate worst-case trace for pool exhaustion: a 4-slot engine
+    over a 4-block pool where the head request alone reserves 3 blocks.
+    Admission must defer on free BLOCKS (not free slots) without crashing,
+    keep strict FIFO order (later small requests never jump the blocked
+    head), resume as finished requests free their blocks, and still
+    produce bit-exact tokens."""
+    model, cfg = setup
+    rng = np.random.default_rng(17)
+    # head request: 5+4 -> 9 tokens -> 3 blocks; three more at 2 blocks each
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+               for n in (5, 4, 4, 4)]
+    budgets = [4, 3, 3, 3]
+    eng = ContinuousEngine(model, cfg, batch=4, max_len=16, max_prompt_len=6,
+                           kv_layout="paged", block_size=4, n_blocks=4)
+    uids = [eng.submit(p, max_new_tokens=n)
+            for p, n in zip(prompts, budgets)]
+    eng.step()
+    # head took 3 of 4 blocks; the next (2-block) request must wait even
+    # though 3 slots are free
+    assert eng.scheduler.n_running == 1
+    assert eng.scheduler.n_pending == 3
+    assert eng.manager.allocator.n_free == 1
+    comps = eng.run()
+    assert [c.uid for c in comps] == sorted(uids)
+    assert list(eng.scheduler.admitted) == uids  # FIFO, no starvation
+    for p, n, c in zip(prompts, budgets, comps):
+        np.testing.assert_array_equal(
+            np.array(c.tokens), _baseline(model, cfg, p, n, max_len=16))
+    assert eng.manager.fully_free
+
+
+def test_request_larger_than_pool_rejected_at_submit(setup):
+    """A request whose worst-case reservation can NEVER fit the pool is
+    rejected up front instead of deadlocking the FIFO head."""
+    model, cfg = setup
+    eng = ContinuousEngine(model, cfg, batch=2, max_len=16, max_prompt_len=6,
+                           kv_layout="paged", block_size=4, n_blocks=2)
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(6, np.int32), max_new_tokens=8)  # needs 4 > 2
+    eng.submit(np.zeros(4, np.int32), max_new_tokens=4)  # 2 blocks: fits
+    (comp,) = eng.run()
+    assert len(comp.tokens) == 4
 
 
 def test_prompt_longer_than_prefill_width_rejected(setup):

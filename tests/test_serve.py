@@ -120,3 +120,40 @@ def test_trace_is_deterministic():
     for (ta, ra), (tb, rb) in zip(a, b):
         assert ta == tb and ra.max_new_tokens == rb.max_new_tokens
         assert (ra.prompt == rb.prompt).all()
+
+
+def test_trace_shared_prefix():
+    from repro.serve import make_trace
+
+    trace = make_trace(4, seed=2, min_prompt=2, max_prompt=6,
+                       shared_prefix=8)
+    first = trace[0][1].prompt[:8]
+    for _, r in trace:
+        assert r.prompt.size >= 10
+        np.testing.assert_array_equal(r.prompt[:8], first)
+
+
+def test_paged_kv_resident_bytes_below_dense_allocation(key):
+    """The point of paging: on a mixed-length trace the peak HBM-resident
+    KV bytes of the paged layout stay well under the dense layout's
+    batch*max_len reservation, with identical greedy tokens."""
+    from repro.serve import bench_trace, make_trace
+
+    cfg = get_config("paper-tiny").reduced()
+    model = build_model(key, cfg)
+    trace = make_trace(6, seed=3, load=1.0, min_prompt=2, max_prompt=8,
+                       min_new=2, max_new=6, vocab=cfg.vocab)
+    dims = dict(batch=2, max_len=64, max_prompt_len=8)
+    dense_done, dstats = bench_trace(model, cfg, trace, **dims,
+                                     kv_layout="dense")
+    paged_done, pstats = bench_trace(model, cfg, trace, **dims,
+                                     kv_layout="paged", block_size=8)
+    for cd, cp in zip(dense_done, paged_done):
+        assert cd.tokens == cp.tokens
+    assert dstats["kv_layout"] == "dense"
+    assert pstats["kv_layout"] == "paged"
+    # each request needs at most 14 positions => 2 blocks of 8; dense pins
+    # 2 slots * 64 lanes
+    assert pstats["peak_blocks_in_use"] <= 4
+    assert pstats["kv_peak_resident_bytes"] * 2 <= \
+        dstats["kv_allocated_bytes"]

@@ -1,10 +1,13 @@
-"""Continuous-batching serving benchmark: dense-slot vs paged KV layout.
+"""Continuous-batching serving benchmark: dense-slot vs paged KV layout,
+dense-gather vs fused Pallas paged-attention decode.
 
     PYTHONPATH=src python benchmarks/serve_continuous.py            # full
     PYTHONPATH=src python benchmarks/serve_continuous.py --smoke    # CI
+    PYTHONPATH=src python benchmarks/serve_continuous.py --smoke \
+        --json BENCH_serve.json                                     # artifact
 
 Replays one Poisson arrival trace of variable-length prompts through
-``repro.serve.ContinuousEngine`` three times:
+``repro.serve.ContinuousEngine`` four times:
 
 * ``dense`` — the per-slot KV layout: every decode slot pins a dense
   ``max_len`` KV lane for its whole lifetime, so HBM-resident KV bytes are
@@ -14,42 +17,83 @@ Replays one Poisson arrival trace of variable-length prompts through
   ``ceil(min(prompt+max_new, max_len) / block_size)`` blocks, so the KV
   high-water mark tracks live tokens.  Greedy tokens are asserted
   bit-identical to the dense replay.
+* ``paged+pallas`` — same paged layout, but decode attention runs the
+  fused :func:`repro.kernels.paged_attention` kernel (interpret mode on
+  CPU): the block gather streams through VMEM inside the online-softmax
+  loop instead of materializing the dense ``(batch, max_len, kvh, hd)``
+  view.  Greedy tokens are asserted bit-identical to the gather path.
 * ``paged+fact`` — the paper's post-training use case on top: the model is
   SVD-factorized with ``auto_fact`` and served through the same paged
   engine.
 
-Reports tokens/s + p50/p95 per-request latency, and HBM-resident KV bytes
-(dense allocation vs paged peak residency).  The mixed-length trace leaves
-the dense layout's worst-case reservation mostly idle; the run asserts the
-paged layout needs >= 2x fewer resident KV bytes.
+Beyond the trace replays, a decode-step microbenchmark times the jitted
+batched decode step alone (all slots live) for the dense-gather vs fused
+kernel paths — the number ``BENCH_serve.json`` tracks across PRs.  On CPU
+the fused kernel runs in interpret mode, so the timing there measures
+overhead parity, not the TPU win; the benchmark records, it does not
+assert an ordering.
 
-``run()`` returns the rows for ``benchmarks.run``-style aggregation;
-``--smoke`` uses the reduced config + a short trace (the CI gate).
+Reports tokens/s + p50/p95 per-request latency, HBM-resident KV bytes
+(dense allocation vs paged peak residency), and the decode-step times.
+``run()`` returns (rows, summary); ``--smoke`` uses the reduced config +
+a short trace (the CI gate) and ``--json`` writes the summary for the
+workflow artifact / the committed ``BENCH_serve.json``.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+import time
 
 import jax
+import numpy as np
 
 from repro.configs import get_config
 from repro.core import auto_fact
 from repro.models import build_model
-from repro.serve import (bench_trace, format_kv_stats, format_stats,
-                         greedy_agreement, make_trace)
+from repro.serve import (ContinuousEngine, bench_trace, format_kv_stats,
+                         format_stats, greedy_agreement, make_trace)
+
+
+def decode_step_ms(model, cfg, *, batch, max_len, max_prompt_len,
+                   block_size, decode_kernel, iters=20, warmup=3) -> float:
+    """Mean wall time of ONE jitted batched decode step with every slot
+    live — isolates the attention-gather cost from scheduler/prefill
+    overhead.  Submits ``batch`` max-budget requests, admits them all,
+    then drives the jitted decode directly."""
+    eng = ContinuousEngine(model, cfg, batch=batch, max_len=max_len,
+                           max_prompt_len=max_prompt_len, kv_layout="paged",
+                           block_size=block_size,
+                           decode_kernel=decode_kernel)
+    rng = np.random.default_rng(0)
+    for _ in range(batch):
+        eng.submit(rng.integers(0, cfg.vocab, max_prompt_len - 1)
+                   .astype(np.int32), max_new_tokens=max_len)
+    eng.step()  # admit every slot + compile the decode step
+    key = eng._next_key()
+    for _ in range(warmup):
+        eng.cache, eng.state, nxt, _ = eng._decode(eng.cache, eng.state, key)
+    jax.block_until_ready(nxt)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        eng.cache, eng.state, nxt, _ = eng._decode(eng.cache, eng.state, key)
+    jax.block_until_ready(nxt)
+    return (time.perf_counter() - t0) / iters * 1e3
 
 
 def run(*, smoke: bool = False, fact_rank: float = 0.5, solver: str = "svd",
-        seed: int = 0) -> list:
+        seed: int = 0) -> tuple:
     cfg = get_config("paper-tiny")
     batch, max_len, max_prompt, block_size = 8, 256, 48, 16
     n_requests, load, max_new = 32, 0.5, 32
+    step_iters = 20
     if smoke:
         cfg = cfg.reduced()
         batch, max_len, max_prompt, block_size = 4, 64, 12, 8
         n_requests, load, max_new = 8, 1.0, 6
+        step_iters = 10
 
     model = build_model(jax.random.PRNGKey(0), cfg)
     trace = make_trace(n_requests, seed=seed, load=load, min_prompt=4,
@@ -82,6 +126,31 @@ def run(*, smoke: bool = False, fact_rank: float = 0.5, solver: str = "svd",
           f"(dense-slot reserves batch*max_len = {batch}*{max_len} lanes)")
     assert reduction >= 2.0, f"expected >= 2x KV reduction, got {reduction:.2f}x"
 
+    # fused Pallas paged-attention decode: same trace, same greedy tokens
+    fused_done, fustats = bench_trace(model, cfg, trace, **dims,
+                                      kv_layout="paged",
+                                      block_size=block_size,
+                                      decode_kernel="pallas")
+    print(format_stats("paged+pallas", fustats))
+    rows.append({"variant": "paged+pallas", **fustats})
+    for cp, cf in zip(paged_done, fused_done):
+        assert cp.tokens == cf.tokens, \
+            f"fused/gather divergence (prompt_len={cp.prompt_len})"
+    print("fused pallas decode: greedy tokens bit-identical to dense gather")
+
+    # decode-step microbenchmark: the gather-vs-fused number BENCH_serve
+    # tracks (interpret mode on CPU — overhead parity, not the TPU win)
+    step_dims = dict(batch=batch, max_len=max_len, max_prompt_len=max_prompt,
+                     block_size=block_size, iters=step_iters)
+    gather_ms = decode_step_ms(model, cfg, decode_kernel="reference",
+                               **step_dims)
+    fused_ms = decode_step_ms(model, cfg, decode_kernel="pallas",
+                              **step_dims)
+    backend = jax.default_backend()
+    print(f"decode step ({batch} slots, max_len {max_len}): "
+          f"gather {gather_ms:.2f} ms vs fused {fused_ms:.2f} ms "
+          f"[{backend}{'' if backend == 'tpu' else ', interpret'}]")
+
     fact = auto_fact(model, fact_rank, solver=solver,
                      key=jax.random.PRNGKey(1),
                      exclude=["embed", "lm_head"])
@@ -96,22 +165,48 @@ def run(*, smoke: bool = False, fact_rank: float = 0.5, solver: str = "svd",
 
     # sanity: every request drained, token budgets respected
     assert all(len(done) == n_requests
-               for done in (dense_done, paged_done, fact_done))
+               for done in (dense_done, paged_done, fused_done, fact_done))
     assert all(len(c.tokens) >= 1
-               for c in dense_done + paged_done + fact_done)
-    return rows
+               for c in dense_done + paged_done + fused_done + fact_done)
+
+    summary = {
+        "benchmark": "serve_continuous",
+        "smoke": smoke,
+        "backend": backend,
+        "jax_version": jax.__version__,
+        "config": cfg.name,
+        "dims": {"batch": batch, "max_len": max_len,
+                 "max_prompt_len": max_prompt, "block_size": block_size,
+                 "n_requests": n_requests},
+        "decode_step_ms": {"paged_gather": gather_ms,
+                           "paged_pallas_fused": fused_ms},
+        "kv_resident_reduction_x": reduction,
+        "paged_vs_dense_tokens_identical": True,   # asserted above
+        "fused_vs_gather_tokens_identical": True,  # asserted above
+        "greedy_agreement_dense_vs_fact": agree,
+        "rows": rows,
+    }
+    return rows, summary
 
 
 def main(argv=None) -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--smoke", action="store_true",
                    help="reduced config + short trace (CI gate)")
+    p.add_argument("--json", metavar="PATH", default=None,
+                   help="write the run summary as JSON (CI artifact / "
+                        "BENCH_serve.json)")
     p.add_argument("--fact-rank", type=float, default=0.5)
     p.add_argument("--solver", default="svd")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
-    run(smoke=args.smoke, fact_rank=args.fact_rank, solver=args.solver,
-        seed=args.seed)
+    _, summary = run(smoke=args.smoke, fact_rank=args.fact_rank,
+                     solver=args.solver, seed=args.seed)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=2)
+            f.write("\n")
+        print(f"wrote summary to {args.json}")
     print("serve_continuous: OK")
     return 0
 

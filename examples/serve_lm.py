@@ -2,12 +2,18 @@
 serving side) over the paged KV cache.
 
     PYTHONPATH=src python examples/serve_lm.py --reduced --batch 4 \
-        --n-requests 16 --fact-rank 0.5 --shared-prefix 16
+        --n-requests 16 --fact-rank 0.5 --shared-prefix 16 \
+        --kv-layout paged --block-size 8 --decode-kernel pallas
 
-Wraps the production serve driver (``repro.launch.serve``): a Poisson trace
-of variable-length prompts is replayed through ``ContinuousEngine`` —
-requests join recyclable decode slots mid-flight under one jitted
-prefill/decode pair — for the dense model and its SVD-factorized copy.
+Wraps the production serve driver (``repro.launch.serve``), so every
+engine knob threads straight through: ``--kv-layout`` / ``--block-size`` /
+``--n-blocks`` pick the KV layout, ``--decode-kernel`` picks the paged
+decode attention (``reference`` dense gather vs the fused ``pallas``
+paged-attention kernel), ``--shared-prefix`` exercises the prefix cache.
+A Poisson trace of variable-length prompts is replayed through
+``ContinuousEngine`` — requests join recyclable decode slots mid-flight
+under one jitted prefill/decode pair — for the dense model and its
+SVD-factorized copy.
 
 The KV cache is **paged** by default: instead of each slot pinning a dense
 ``max_len`` lane, all slots share one pool of ``block_size``-token KV
@@ -30,7 +36,8 @@ Programmatic use::
 
     from repro.serve import ContinuousEngine
     eng = ContinuousEngine(model, cfg, batch=8, max_len=256,
-                           max_prompt_len=64, block_size=16)
+                           max_prompt_len=64, block_size=16,
+                           decode_kernel="pallas")  # fused paged attention
     eng.submit(prompt_ids, max_new_tokens=32)                  # greedy
     eng.submit(other_ids, max_new_tokens=16, temperature=0.8,
                stop_ids=(eos_id,))

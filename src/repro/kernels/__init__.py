@@ -1,7 +1,18 @@
-"""Pallas TPU kernels for the paper's compute hot-spot: the fused LED
-(low-rank) matmul.  See led_matmul.py (kernel), ops.py (jit wrappers +
-custom VJP), ref.py (pure-jnp oracle)."""
+"""Pallas TPU kernels for the serving/compute hot-spots.
 
-from repro.kernels.ops import led_matmul, led_matmul_ref, led_matmul_trainable
+* ``led_matmul`` — the paper's fused LED (low-rank) matmul ``(x @ A) @ B``
+  (led_matmul.py kernel, ops.py jit wrappers + custom VJP).
+* ``paged_attention`` — fused paged-attention decode: single-query
+  attention streamed block-by-block from the shared KV pool through the
+  per-slot block tables (paged_attention.py).
+* ``ref`` — pure-jnp oracles for both; the correctness references the
+  interpret-mode CI matrix pins the kernels against (see README.md).
+"""
 
-__all__ = ["led_matmul", "led_matmul_ref", "led_matmul_trainable"]
+from repro.kernels.ops import (default_interpret, led_matmul,
+                               led_matmul_ref, led_matmul_trainable)
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ref import paged_attention_ref
+
+__all__ = ["default_interpret", "led_matmul", "led_matmul_ref",
+           "led_matmul_trainable", "paged_attention", "paged_attention_ref"]

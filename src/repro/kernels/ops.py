@@ -8,6 +8,8 @@ back.  On non-TPU backends (this container is CPU-only) it runs the kernel in
 
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
@@ -15,7 +17,16 @@ from repro.kernels.led_matmul import led_matmul_2d
 from repro.kernels.ref import led_matmul_ref
 
 
-def _default_interpret() -> bool:
+def default_interpret() -> bool:
+    """Shared interpret-mode policy for every Pallas kernel in the repo.
+
+    Off-TPU backends (this container is CPU-only) run the *same* kernel
+    bodies in ``interpret=True`` mode so tests exercise them everywhere;
+    ``REPRO_PALLAS_INTERPRET=1`` forces interpret mode even on TPU (the
+    CI ``kernels-interpret`` job sets it so kernel regressions are caught
+    without hardware)."""
+    if os.environ.get("REPRO_PALLAS_INTERPRET", "0") not in ("", "0"):
+        return True
     return jax.default_backend() != "tpu"
 
 
@@ -35,7 +46,7 @@ def led_matmul(
 ) -> jax.Array:
     """Fused ``(x @ A) @ B``. x: (..., K); a: (K, R); b: (R, N)."""
     if interpret is None:
-        interpret = _default_interpret()
+        interpret = default_interpret()
     *lead, kdim = x.shape
     r = a.shape[-1]
     n = b.shape[-1]
@@ -94,4 +105,5 @@ def _led_bwd(res, dy):
 
 led_matmul_trainable.defvjp(_led_fwd, _led_bwd)
 
-__all__ = ["led_matmul", "led_matmul_ref", "led_matmul_trainable"]
+__all__ = ["default_interpret", "led_matmul", "led_matmul_ref",
+           "led_matmul_trainable"]

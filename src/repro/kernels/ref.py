@@ -6,6 +6,9 @@ import jax
 import jax.numpy as jnp
 
 
+NEG_INF = -1e30  # must stay equal to repro.nn.attention.NEG_INF (see there)
+
+
 def led_matmul_ref(x: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
     """y = (x @ A) @ B with fp32 accumulation.
 
@@ -16,3 +19,39 @@ def led_matmul_ref(x: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
     y = jnp.dot(t, b.astype(jnp.float32),
                 preferred_element_type=jnp.float32)
     return y.astype(x.dtype)
+
+
+def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        table: jax.Array, pos: jax.Array) -> jax.Array:
+    """Pure-jnp oracle for :func:`repro.kernels.paged_attention`.
+
+    Materializes the dense gather the fused kernel avoids, then runs
+    masked single-query attention with the exact kernel semantics: fp32
+    accumulation, ``kpos <= pos`` and sentinel-block masking, and a
+    guarded division so a fully-masked slot yields zeros (``jax.nn.
+    softmax`` would yield uniform weights there instead).
+
+    q: (batch, heads, head_dim); k/v_pool: (n_blocks, block_size,
+    kv_heads, head_dim); table: (batch, max_table) int32 with sentinel
+    ``n_blocks``; pos: (batch,) int32 -> (batch, heads, head_dim).
+    """
+    batch, heads, hd = q.shape
+    n_blocks, bs, kvh, _ = k_pool.shape
+    group = heads // kvh
+    n_table = table.shape[1]
+    kpos = jnp.arange(n_table * bs)
+    safe = jnp.minimum(table, n_blocks - 1)  # clamp sentinel for the gather
+    rows = safe[:, kpos // bs] * bs + (kpos % bs)[None, :]
+    gk = k_pool.reshape(n_blocks * bs, kvh, hd)[rows].astype(jnp.float32)
+    gv = v_pool.reshape(n_blocks * bs, kvh, hd)[rows].astype(jnp.float32)
+    valid = ((kpos[None, :] <= pos[:, None])
+             & (table[:, kpos // bs] != n_blocks))  # (batch, S)
+    qf = q.astype(jnp.float32).reshape(batch, kvh, group, hd)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qf, gk) / jnp.sqrt(
+        jnp.float32(hd))
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    m = logits.max(-1, keepdims=True)
+    p = jnp.where(valid[:, None, None, :], jnp.exp(logits - m), 0.0)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, gv) / jnp.maximum(
+        p.sum(-1, keepdims=True), 1e-30)
+    return out.reshape(batch, heads, hd).astype(q.dtype)

@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch paper-tiny \
         --batch 8 --max-len 256 --n-requests 32 \
-        [--kv-layout paged --block-size 16] [--fact-rank 0.5 --solver svd]
+        [--kv-layout paged --block-size 16 --decode-kernel pallas] \
+        [--fact-rank 0.5 --solver svd]
 
 Replays a Poisson arrival trace of variable-length prompts through the
 continuous-batching engine (``repro.serve.ContinuousEngine``): requests are
@@ -12,9 +13,12 @@ pool of ``--block-size``-token KV blocks through per-slot block tables,
 with refcounted prefix caching for shared prompt prefixes — so
 HBM-resident KV bytes track live tokens instead of ``batch * max_len``
 (``--kv-layout dense`` restores the per-slot lanes for comparison; both
-layouts produce bit-identical greedy tokens).  ``--shared-prefix N`` gives
-every prompt one common N-token system prefix to exercise the prefix
-cache.  Demonstrates the paper's post-training-factorization use case
+layouts produce bit-identical greedy tokens).  ``--decode-kernel pallas``
+swaps the paged decode attention from the dense-gather reference to the
+fused Pallas kernel (``repro.kernels.paged_attention`` — KV blocks stream
+through VMEM inside the online-softmax loop; interpret mode off-TPU;
+greedy tokens stay bit-identical).  ``--shared-prefix N`` gives every
+prompt one common N-token system prefix to exercise the prefix cache.  Demonstrates the paper's post-training-factorization use case
 end-to-end — the dense model is factorized with SVD *after* "training"
 (here: at init), then served; tokens/s, p50/p95 latency, and HBM-resident
 KV bytes are printed per variant.
@@ -51,6 +55,10 @@ def main(argv=None) -> int:
                    help="tokens per KV block (paged layout)")
     p.add_argument("--n-blocks", type=int, default=0,
                    help="KV pool size; 0 = batch * ceil(max_len/block_size)")
+    p.add_argument("--decode-kernel", choices=("reference", "pallas"),
+                   default="reference",
+                   help="paged decode attention: dense-gather reference or "
+                        "the fused Pallas paged-attention kernel")
     p.add_argument("--shared-prefix", type=int, default=0,
                    help="common system-prompt tokens prepended to every "
                         "request (prefix-cache workload)")
@@ -64,6 +72,8 @@ def main(argv=None) -> int:
     if not 0 <= args.shared_prefix <= args.max_prompt_len - min_prompt:
         p.error(f"--shared-prefix must be in [0, {args.max_prompt_len} - "
                 f"{min_prompt}] so prompts still fit --max-prompt-len")
+    if args.kv_layout != "paged" and args.decode_kernel != "reference":
+        p.error("--decode-kernel pallas requires --kv-layout paged")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -80,6 +90,7 @@ def main(argv=None) -> int:
                 kv_layout=args.kv_layout)
     if args.kv_layout == "paged":
         dims["block_size"] = args.block_size
+        dims["decode_kernel"] = args.decode_kernel
         if args.n_blocks:
             dims["n_blocks"] = args.n_blocks
     dense_done, stats = bench_trace(model, cfg, trace, **dims)

@@ -62,8 +62,9 @@ class DenseBlock(Module):
         x = x + self.mlp(self.mlp_norm(x))
         return x, cache
 
-    def decode(self, x, cache: KVCache):
-        a, cache = self.attn.decode(self.attn_norm(x), cache)
+    def decode(self, x, cache: KVCache, decode_kernel: str = "reference"):
+        a, cache = self.attn.decode(self.attn_norm(x), cache,
+                                    decode_kernel=decode_kernel)
         x = x + a
         x = x + self.mlp(self.mlp_norm(x))
         return x, cache
@@ -102,8 +103,9 @@ class MoEBlock(Module):
         x = x + self.mlp(self.mlp_norm(x)).y
         return x, cache
 
-    def decode(self, x, cache: KVCache):
-        a, cache = self.attn.decode(self.attn_norm(x), cache)
+    def decode(self, x, cache: KVCache, decode_kernel: str = "reference"):
+        a, cache = self.attn.decode(self.attn_norm(x), cache,
+                                    decode_kernel=decode_kernel)
         x = x + a
         x = x + self.mlp(self.mlp_norm(x)).y
         return x, cache
@@ -241,12 +243,16 @@ class TransformerLM(Module):
                                    cache.length.shape)
         return logits, new_cache._replace(length=new_len)
 
-    def decode(self, token: jax.Array, cache):
+    def decode(self, token: jax.Array, cache, *,
+               decode_kernel: str = "reference"):
         """token: (batch, 1) -> logits (batch, 1, vocab) + updated cache.
 
         Accepts a dense :class:`KVCache` or a :class:`PagedKVCache`; for the
         paged layout the block table is shared across layers, so only the
-        pool k/v and per-layer lengths ride through the layer scan."""
+        pool k/v and per-layer lengths ride through the layer scan, and
+        ``decode_kernel`` picks the paged attention implementation
+        (``"reference"`` dense gather vs ``"pallas"`` fused kernel — see
+        :meth:`repro.nn.attention.Attention.decode`)."""
         x = self.embed(token)
 
         if isinstance(cache, PagedKVCache):
@@ -254,7 +260,8 @@ class TransformerLM(Module):
 
             def body(x, xs):
                 blk, (k, v, ln) = xs
-                y, c2 = blk.decode(x, PagedKVCache(k, v, table, ln))
+                y, c2 = blk.decode(x, PagedKVCache(k, v, table, ln),
+                                   decode_kernel=decode_kernel)
                 return y, (c2.k, c2.v, c2.length)
 
             x, (k, v, ln) = jax.lax.scan(

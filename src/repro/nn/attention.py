@@ -22,6 +22,10 @@ from repro.nn.linear import Linear
 from repro.nn.module import Module, static_field
 from repro.nn.rotary import apply_rope
 
+# mask fill value — must stay equal to repro.kernels.ref.NEG_INF (the pallas
+# kernels and their oracles) for the paged-decode bit-identity contract; kept
+# as a local literal because nn only imports repro.kernels lazily (pallas
+# must not load for training-only use)
 NEG_INF = -1e30
 
 
@@ -268,7 +272,8 @@ class Attention(Module):
             new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v, 0, axis=1)
         return self.o_proj(out), KVCache(new_k, new_v, jnp.asarray(s, jnp.int32))
 
-    def decode(self, x: jax.Array, cache) -> tuple[jax.Array, "KVCache"]:
+    def decode(self, x: jax.Array, cache, *,
+               decode_kernel: str = "reference") -> tuple[jax.Array, "KVCache"]:
         """One-token decode step. x: (batch, 1, dim).
 
         With a :class:`KVCache`, ``cache.length`` is either a scalar
@@ -277,9 +282,12 @@ class Attention(Module):
         advances independently, with its own RoPE position, cache write
         offset, and validity mask).  With a :class:`PagedKVCache`, K/V rows
         are scattered to / gathered from the shared block pool through each
-        slot's block table."""
+        slot's block table; ``decode_kernel`` selects the paged attention
+        implementation (``"reference"`` = dense gather + masked softmax,
+        ``"pallas"`` = the fused block-streaming kernel) and is ignored for
+        dense caches."""
         if isinstance(cache, PagedKVCache):
-            return self._decode_paged(x, cache)
+            return self._decode_paged(x, cache, kernel=decode_kernel)
         b = x.shape[0]
         pos = cache.length
         per_slot = pos.ndim == 1
@@ -323,23 +331,31 @@ class Attention(Module):
         out = self._attend(q, new_k.astype(x.dtype), new_v.astype(x.dtype), mask)
         return self.o_proj(out), KVCache(new_k, new_v, pos + 1)
 
-    def _decode_paged(self, x: jax.Array,
-                      cache: PagedKVCache) -> tuple[jax.Array, PagedKVCache]:
+    def _decode_paged(self, x: jax.Array, cache: PagedKVCache,
+                      kernel: str = "reference"
+                      ) -> tuple[jax.Array, PagedKVCache]:
         """One-token decode against the shared block pool.
 
         The new K/V row is scattered to ``table[b, pos // bs] * bs +
         pos % bs`` (``mode='drop'``: slots whose table entry is the
         unmapped sentinel — finished or never admitted — write nowhere, so
         a frozen slot can never clobber a block recycled to another
-        request).  Attention then gathers every mapped pool row back into
-        logical order and masks ``kpos > pos``; gathers through sentinel
-        entries clip into masked lanes, and exactly-NEG_INF masking makes
-        their contribution a hard zero, keeping outputs bit-identical to
-        the dense per-slot layout."""
+        request).  ``kernel="reference"`` (the dense-gather baseline) then
+        gathers every mapped pool row back into logical order and masks
+        ``kpos > pos``; gathers through sentinel entries clip into masked
+        lanes, and exactly-NEG_INF masking makes their contribution a hard
+        zero, keeping outputs bit-identical to the dense per-slot layout.
+        ``kernel="pallas"`` replaces the gather + attention with the fused
+        :func:`repro.kernels.paged_attention` kernel — blocks stream
+        through VMEM inside a flash-style online-softmax loop and the
+        dense ``(batch, max_len, kvh, hd)`` view is never materialized
+        (sentinel and ``kpos > pos`` masking move in-kernel)."""
         if self.window > 0:
             raise NotImplementedError(
                 "paged decode supports global attention only; sliding-window "
                 "layers use the ring-buffer KVCache path")
+        if kernel not in ("reference", "pallas"):
+            raise ValueError(f"unknown paged decode kernel {kernel!r}")
         pos = cache.length  # (b,)
         positions = pos[:, None].astype(jnp.int32)
         q, k, v = self._qkv(x, positions=positions, kv_positions=positions)
@@ -360,12 +376,20 @@ class Attention(Module):
                                         mode="drop")
         pool_v = pool_v.at[row_new].set(v[:, 0].astype(pool_v.dtype),
                                         mode="drop")
-        kpos = jnp.arange(max_table * bs)
-        rows = cache.table[:, kpos // bs] * bs + (kpos % bs)[None, :]
-        gk = pool_k[rows].astype(x.dtype)  # (b, max_table*bs, kvh, hd)
-        gv = pool_v[rows].astype(x.dtype)
-        valid = kpos[None, :] <= pos[:, None]
-        out = self._attend(q, gk, gv, valid[:, None, None, :])
-        return self.o_proj(out), PagedKVCache(
-            pool_k.reshape(nb, bs, kvh, hd), pool_v.reshape(nb, bs, kvh, hd),
-            cache.table, pos + 1)
+        new_k = pool_k.reshape(nb, bs, kvh, hd)
+        new_v = pool_v.reshape(nb, bs, kvh, hd)
+        if kernel == "pallas":
+            from repro.kernels.paged_attention import paged_attention
+
+            b = x.shape[0]
+            out = paged_attention(q[:, 0], new_k, new_v, cache.table, pos)
+            out = out.reshape(b, 1, self.num_heads * self.head_dim)
+        else:
+            kpos = jnp.arange(max_table * bs)
+            rows = cache.table[:, kpos // bs] * bs + (kpos % bs)[None, :]
+            gk = pool_k[rows].astype(x.dtype)  # (b, max_table*bs, kvh, hd)
+            gv = pool_v[rows].astype(x.dtype)
+            valid = kpos[None, :] <= pos[:, None]
+            out = self._attend(q, gk, gv, valid[:, None, None, :])
+        return self.o_proj(out), PagedKVCache(new_k, new_v, cache.table,
+                                              pos + 1)

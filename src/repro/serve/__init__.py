@@ -16,7 +16,11 @@ Four layers:
   gather/scatter against the table inside the same single jitted step;
   HBM spent on KV is proportional to live tokens, not ``batch *
   max_len``.  ``kv_layout="dense"`` keeps the original per-slot lanes as
-  the bit-exactness baseline.
+  the bit-exactness baseline, and ``decode_kernel="pallas"`` swaps the
+  paged decode gather+attention for the fused
+  :func:`repro.kernels.paged_attention` kernel (KV blocks stream through
+  VMEM inside an online-softmax loop; greedy tokens bit-identical to the
+  ``"reference"`` dense-gather path).
 * ``repro.serve.paging`` — host block bookkeeping.  Refcounted
   ``BlockAllocator`` over the pool, ``PrefixCache`` keyed by sha256
   hash-chains over *full* prompt blocks (``key_i = sha256(key_{i-1} ||

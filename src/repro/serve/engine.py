@@ -143,6 +143,13 @@ class ContinuousEngine:
       dense ``max_len`` lane, spliced with ``lax.dynamic_update_slice``.
       Kept as the bit-exactness baseline and for the benchmark comparison.
 
+    ``decode_kernel`` (paged layout only) picks the decode attention
+    implementation: ``"reference"`` materializes the dense gather from
+    the pool before masked attention; ``"pallas"`` runs the fused
+    :func:`repro.kernels.paged_attention` kernel, streaming KV blocks
+    through VMEM inside an online-softmax loop (interpret mode off-TPU).
+    Greedy tokens are bit-identical between the two.
+
     Requires a global-attention KV cache (``cfg.window == 0``) — ring-buffer
     lanes cannot be slot-recycled or paged yet (see ROADMAP).
     """
@@ -151,7 +158,8 @@ class ContinuousEngine:
                  max_prompt_len: int, max_stop_ids: int = 4,
                  cache_dtype=jnp.float32, seed: int = 0,
                  kv_layout: str = "paged", block_size: int = 16,
-                 n_blocks: Optional[int] = None):
+                 n_blocks: Optional[int] = None,
+                 decode_kernel: str = "reference"):
         if cfg.window:
             raise UnsupportedCacheError(
                 "continuous batching needs a global-attention KV cache "
@@ -164,6 +172,13 @@ class ContinuousEngine:
             raise ValueError("need 0 < max_prompt_len < max_len")
         if kv_layout not in ("paged", "dense"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        if decode_kernel not in ("reference", "pallas"):
+            raise ValueError(f"unknown decode_kernel {decode_kernel!r}")
+        if decode_kernel == "pallas" and kv_layout != "paged":
+            raise ValueError(
+                "decode_kernel='pallas' is the fused paged-attention "
+                "kernel; it requires kv_layout='paged'")
+        self.decode_kernel = decode_kernel
         self.model, self.cfg = model, cfg
         self.batch, self.max_len = batch, max_len
         self.max_prompt_len, self.max_stop_ids = max_prompt_len, max_stop_ids
@@ -262,8 +277,18 @@ class ContinuousEngine:
                                   v=pool_v.reshape(cache.v.shape),
                                   length=ln), state, done0
 
+        if self.manager is not None:
+            # paged decode takes the kernel knob; dense/per-slot model
+            # families keep their original decode signature
+            dk = self.decode_kernel
+
+            def model_decode(tok, cache):
+                return model.decode(tok, cache, decode_kernel=dk)
+        else:
+            model_decode = model.decode
+
         def decode_fn(cache, state, key):
-            logits, new_cache = model.decode(state.tok[:, None], cache)
+            logits, new_cache = model_decode(state.tok[:, None], cache)
             nxt = _sample(logits[:, 0], state.temp, key)
             nxt = jnp.where(state.active, nxt, state.tok)
             # frozen slots keep their cache position and token
@@ -416,7 +441,8 @@ class ContinuousEngine:
                 "block_size": self.block_size, "n_blocks": self.n_blocks,
                 "peak_blocks_in_use": a.peak_in_use,
                 "blocks_in_use": a.n_in_use,
-                "prefix_hit_tokens": self.manager.prefix_hit_tokens}
+                "prefix_hit_tokens": self.manager.prefix_hit_tokens,
+                "decode_kernel": self.decode_kernel}
 
     def run(self, max_steps: Optional[int] = None) -> list:
         """Step until every submitted request has finished."""

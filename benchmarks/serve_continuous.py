@@ -1,43 +1,48 @@
 """Continuous-batching serving benchmark: dense-slot vs paged KV layout,
-dense-gather vs fused Pallas paged-attention decode.
+dense-gather vs fused Pallas paged-attention decode, monolithic vs
+chunked prefill, prefix-reuse compute skip.
 
     PYTHONPATH=src python benchmarks/serve_continuous.py            # full
     PYTHONPATH=src python benchmarks/serve_continuous.py --smoke    # CI
     PYTHONPATH=src python benchmarks/serve_continuous.py --smoke \
         --json BENCH_serve.json                                     # artifact
 
-Replays one Poisson arrival trace of variable-length prompts through
-``repro.serve.ContinuousEngine`` four times:
+Four replays of one Poisson arrival trace establish the layout/kernel
+matrix (all greedy tokens asserted bit-identical where applicable):
 
-* ``dense`` — the per-slot KV layout: every decode slot pins a dense
-  ``max_len`` KV lane for its whole lifetime, so HBM-resident KV bytes are
-  ``batch * max_len`` lanes regardless of what the requests actually use.
-* ``paged`` — the block-table layout: slots share a pool of
-  ``block_size``-token KV blocks and each request reserves only
-  ``ceil(min(prompt+max_new, max_len) / block_size)`` blocks, so the KV
-  high-water mark tracks live tokens.  Greedy tokens are asserted
-  bit-identical to the dense replay.
-* ``paged+pallas`` — same paged layout, but decode attention runs the
-  fused :func:`repro.kernels.paged_attention` kernel (interpret mode on
-  CPU): the block gather streams through VMEM inside the online-softmax
-  loop instead of materializing the dense ``(batch, max_len, kvh, hd)``
-  view.  Greedy tokens are asserted bit-identical to the gather path.
-* ``paged+fact`` — the paper's post-training use case on top: the model is
-  SVD-factorized with ``auto_fact`` and served through the same paged
-  engine.
+* ``dense`` — per-slot KV lanes: HBM-resident KV bytes are
+  ``batch * max_len`` regardless of live tokens.
+* ``paged`` — block-table layout: the KV high-water mark tracks live
+  tokens (asserted >= 2x below the dense reservation).
+* ``paged+pallas`` — same layout, fused paged-attention decode kernel
+  (interpret mode on CPU).
+* ``paged+fact`` — the paper's post-training use case: the model is
+  SVD-factorized with ``auto_fact`` and served through the same engine.
 
-Beyond the trace replays, a decode-step microbenchmark times the jitted
-batched decode step alone (all slots live) for the dense-gather vs fused
-kernel paths — the number ``BENCH_serve.json`` tracks across PRs.  On CPU
-the fused kernel runs in interpret mode, so the timing there measures
-overhead parity, not the TPU win; the benchmark records, it does not
-assert an ordering.
+Two chunked-prefill experiments then demonstrate the admission-path wins:
 
-Reports tokens/s + p50/p95 per-request latency, HBM-resident KV bytes
-(dense allocation vs paged peak residency), and the decode-step times.
+* **stall** — a mixed long/short trace replayed through the
+  monolithic-equivalent prefill (one full-width chunk, unbounded per-step
+  budget: every admission stalls decode for its whole prompt) vs the
+  chunked pipeline (bounded padded tokens per step).  Asserted: identical
+  greedy tokens, and the chunked path's worst per-step prefill burst —
+  the deterministic stand-in for inter-decode-step stall — is both
+  bounded by its budget and strictly below the monolithic burst.  Wall
+  p50/p95/max per step are recorded (not asserted: CPU timing noise).
+* **prefix** — a shared-system-prompt trace replayed with prefix reuse
+  on vs off.  Asserted: identical greedy tokens, and prefill compute
+  drops by EXACTLY the tokens served from cached prefix blocks.
+
+A decode-step microbenchmark times the jitted batched decode step alone
+(gather vs fused kernel) — on CPU the fused kernel runs in interpret
+mode, so that timing measures overhead parity, not the TPU win.
+
 ``run()`` returns (rows, summary); ``--smoke`` uses the reduced config +
-a short trace (the CI gate) and ``--json`` writes the summary for the
-workflow artifact / the committed ``BENCH_serve.json``.
+short traces (the CI gate — the long-prompt mixed trace runs there too,
+so chunking is exercised in CI) and ``--json`` writes the summary for
+the workflow artifact / the committed ``BENCH_serve.json``.  The summary
+carries TTFT p50/p95, prefix-hit-rate, and per-step stall fields for
+every variant row.
 """
 
 from __future__ import annotations
@@ -54,7 +59,8 @@ from repro.configs import get_config
 from repro.core import auto_fact
 from repro.models import build_model
 from repro.serve import (ContinuousEngine, bench_trace, format_kv_stats,
-                         format_stats, greedy_agreement, make_trace)
+                         format_prefill_stats, format_stats,
+                         greedy_agreement, make_trace)
 
 
 def decode_step_ms(model, cfg, *, batch, max_len, max_prompt_len,
@@ -66,7 +72,8 @@ def decode_step_ms(model, cfg, *, batch, max_len, max_prompt_len,
     eng = ContinuousEngine(model, cfg, batch=batch, max_len=max_len,
                            max_prompt_len=max_prompt_len, kv_layout="paged",
                            block_size=block_size,
-                           decode_kernel=decode_kernel)
+                           decode_kernel=decode_kernel,
+                           prefill_chunk_budget=10**9)
     rng = np.random.default_rng(0)
     for _ in range(batch):
         eng.submit(rng.integers(0, cfg.vocab, max_prompt_len - 1)
@@ -88,20 +95,25 @@ def run(*, smoke: bool = False, fact_rank: float = 0.5, solver: str = "svd",
     cfg = get_config("paper-tiny")
     batch, max_len, max_prompt, block_size = 8, 256, 48, 16
     n_requests, load, max_new = 32, 0.5, 32
+    chunk, budget = 16, 16
+    long_prompt, long_frac = 48, 0.25
     step_iters = 20
     if smoke:
         cfg = cfg.reduced()
-        batch, max_len, max_prompt, block_size = 4, 64, 12, 8
+        batch, max_len, max_prompt, block_size = 4, 64, 24, 8
         n_requests, load, max_new = 8, 1.0, 6
+        chunk, budget = 8, 8
+        long_prompt, long_frac = 24, 0.3
         step_iters = 10
 
     model = build_model(jax.random.PRNGKey(0), cfg)
     trace = make_trace(n_requests, seed=seed, load=load, min_prompt=4,
-                       max_prompt=max_prompt, min_new=4, max_new=max_new,
-                       vocab=cfg.vocab)
+                       max_prompt=max_prompt // 2, min_new=4,
+                       max_new=max_new, vocab=cfg.vocab)
 
     rows = []
-    dims = dict(batch=batch, max_len=max_len, max_prompt_len=max_prompt)
+    dims = dict(batch=batch, max_len=max_len, max_prompt_len=max_prompt,
+                chunk_size=chunk, prefill_chunk_budget=budget)
     dense_done, dstats = bench_trace(model, cfg, trace, **dims,
                                      kv_layout="dense")
     print(format_stats("dense-slot", dstats))
@@ -138,6 +150,63 @@ def run(*, smoke: bool = False, fact_rank: float = 0.5, solver: str = "svd",
             f"fused/gather divergence (prompt_len={cp.prompt_len})"
     print("fused pallas decode: greedy tokens bit-identical to dense gather")
 
+    # ---- chunked-prefill win 1: bounded decode stall under long prompts ----
+    mixed = make_trace(n_requests, seed=seed + 1, load=load, min_prompt=4,
+                       max_prompt=max_prompt // 3, min_new=4,
+                       max_new=max_new, vocab=cfg.vocab,
+                       long_frac=long_frac, long_prompt=long_prompt)
+    base = dict(batch=batch, max_len=max_len, max_prompt_len=max_prompt,
+                kv_layout="paged", block_size=block_size)
+    mono_done, mono = bench_trace(model, cfg, mixed, **base,
+                                  chunk_size=max_prompt,
+                                  buckets=(max_prompt,),
+                                  prefill_chunk_budget=10**9)
+    chunk_done, chnk = bench_trace(model, cfg, mixed, **base,
+                                   chunk_size=chunk,
+                                   prefill_chunk_budget=budget)
+    print(format_prefill_stats("monolithic", mono))
+    print(format_prefill_stats("chunked", chnk))
+    rows.append({"variant": "mixed+monolithic", **mono})
+    rows.append({"variant": "mixed+chunked", **chnk})
+    for cm, cc in zip(mono_done, chunk_done):
+        assert cm.tokens == cc.tokens, \
+            f"chunked/monolithic divergence (prompt_len={cm.prompt_len})"
+    stall_mono = mono["step_prefill_tokens_max"]
+    stall_chnk = chnk["step_prefill_tokens_max"]
+    print(f"worst per-step prefill burst: monolithic {stall_mono} tok "
+          f"vs chunked {stall_chnk} tok (budget {budget})")
+    assert stall_chnk <= max(budget, chunk), \
+        f"chunked burst {stall_chnk} exceeds budget bound"
+    assert stall_chnk < stall_mono, \
+        "chunking did not reduce the per-step prefill burst"
+
+    # ---- chunked-prefill win 2: prefix hits skip prefill compute -----------
+    shared = make_trace(n_requests, seed=seed + 2, load=load, min_prompt=4,
+                        max_prompt=max_prompt // 3, min_new=4,
+                        max_new=max_new, vocab=cfg.vocab,
+                        shared_prefix=2 * block_size)
+    reuse_done, ron = bench_trace(model, cfg, shared, **base,
+                                  chunk_size=chunk,
+                                  prefill_chunk_budget=budget,
+                                  prefix_reuse=True)
+    plain_done, roff = bench_trace(model, cfg, shared, **base,
+                                   chunk_size=chunk,
+                                   prefill_chunk_budget=budget,
+                                   prefix_reuse=False)
+    print(format_prefill_stats("prefix-on", ron))
+    print(format_prefill_stats("prefix-off", roff))
+    rows.append({"variant": "prefix+reuse", **ron})
+    rows.append({"variant": "prefix+noreuse", **roff})
+    for ca, cb in zip(reuse_done, plain_done):
+        assert ca.tokens == cb.tokens, \
+            f"prefix-skip divergence (prompt_len={ca.prompt_len})"
+    saved = (roff["prefill_tokens_computed"] - ron["prefill_tokens_computed"])
+    print(f"prefix reuse skipped {ron['prefix_skipped_tokens']} prompt "
+          f"tokens ({ron['prefix_hit_rate']:.0%} of admitted); prefill "
+          f"compute dropped by {saved} tokens")
+    assert saved == ron["prefix_skipped_tokens"] > 0, \
+        "prefix-hit compute reduction must equal the skipped tokens"
+
     # decode-step microbenchmark: the gather-vs-fused number BENCH_serve
     # tracks (interpret mode on CPU — overhead parity, not the TPU win)
     step_dims = dict(batch=batch, max_len=max_len, max_prompt_len=max_prompt,
@@ -164,10 +233,10 @@ def run(*, smoke: bool = False, fact_rank: float = 0.5, solver: str = "svd",
     print(f"greedy token agreement dense vs factorized: {agree:.1%}")
 
     # sanity: every request drained, token budgets respected
-    assert all(len(done) == n_requests
-               for done in (dense_done, paged_done, fused_done, fact_done))
-    assert all(len(c.tokens) >= 1
-               for c in dense_done + paged_done + fused_done + fact_done)
+    for done in (dense_done, paged_done, fused_done, fact_done,
+                 mono_done, chunk_done, reuse_done, plain_done):
+        assert len(done) == n_requests
+        assert all(len(c.tokens) >= 1 for c in done)
 
     summary = {
         "benchmark": "serve_continuous",
@@ -177,12 +246,24 @@ def run(*, smoke: bool = False, fact_rank: float = 0.5, solver: str = "svd",
         "config": cfg.name,
         "dims": {"batch": batch, "max_len": max_len,
                  "max_prompt_len": max_prompt, "block_size": block_size,
-                 "n_requests": n_requests},
+                 "n_requests": n_requests, "chunk_size": chunk,
+                 "prefill_chunk_budget": budget,
+                 "long_prompt": long_prompt, "long_frac": long_frac},
         "decode_step_ms": {"paged_gather": gather_ms,
                            "paged_pallas_fused": fused_ms},
         "kv_resident_reduction_x": reduction,
-        "paged_vs_dense_tokens_identical": True,   # asserted above
-        "fused_vs_gather_tokens_identical": True,  # asserted above
+        "paged_vs_dense_tokens_identical": True,    # asserted above
+        "fused_vs_gather_tokens_identical": True,   # asserted above
+        "chunked_vs_monolithic_tokens_identical": True,  # asserted above
+        "ttft_p50_ms": pstats["ttft_p50_ms"],
+        "ttft_p95_ms": pstats["ttft_p95_ms"],
+        "prefix_hit_rate": ron["prefix_hit_rate"],
+        "prefix_skipped_tokens": ron["prefix_skipped_tokens"],
+        "prefill_compute_saved_tokens": saved,
+        "stall_step_prefill_tokens_max": {"monolithic": stall_mono,
+                                          "chunked": stall_chnk},
+        "stall_step_wall_p95_ms": {"monolithic": mono["step_wall_p95_ms"],
+                                   "chunked": chnk["step_wall_p95_ms"]},
         "greedy_agreement_dense_vs_fact": agree,
         "rows": rows,
     }

@@ -1,49 +1,59 @@
 """Continuous-batching serving with a factorized model (paper use case 2,
-serving side) over the paged KV cache.
+serving side) over the paged KV cache with chunked, prefix-aware prefill.
 
     PYTHONPATH=src python examples/serve_lm.py --reduced --batch 4 \
         --n-requests 16 --fact-rank 0.5 --shared-prefix 16 \
-        --kv-layout paged --block-size 8 --decode-kernel pallas
+        --kv-layout paged --block-size 8 --decode-kernel pallas \
+        --chunk-size 8 --prefill-budget 8
+
+    # SSE-style streaming: one `data:` line per token as it lands
+    PYTHONPATH=src python examples/serve_lm.py --reduced --batch 4 \
+        --n-requests 8 --stream
 
 Wraps the production serve driver (``repro.launch.serve``), so every
 engine knob threads straight through: ``--kv-layout`` / ``--block-size`` /
 ``--n-blocks`` pick the KV layout, ``--decode-kernel`` picks the paged
 decode attention (``reference`` dense gather vs the fused ``pallas``
-paged-attention kernel), ``--shared-prefix`` exercises the prefix cache.
-A Poisson trace of variable-length prompts is replayed through
-``ContinuousEngine`` — requests join recyclable decode slots mid-flight
-under one jitted prefill/decode pair — for the dense model and its
-SVD-factorized copy.
+paged-attention kernel), ``--chunk-size`` / ``--buckets`` /
+``--prefill-budget`` shape the admission pipeline, ``--shared-prefix`` /
+``--no-prefix-reuse`` / ``--prefix-retain`` exercise the prefix cache,
+and ``--long-frac`` / ``--long-prompt`` mix a heavy prompt tail into the
+Poisson trace.
 
-The KV cache is **paged** by default: instead of each slot pinning a dense
-``max_len`` lane, all slots share one pool of ``block_size``-token KV
-blocks (``(n_layers, n_blocks, block_size, kv_heads, head_dim)``), and a
-per-slot block table of shape ``(batch, ceil(max_len / block_size))`` maps
-logical position ``p`` to pool row ``table[slot, p // block_size] *
-block_size + p % block_size``.  Requests reserve only the blocks they can
-actually use, so HBM-resident KV bytes track live tokens.  Requests that
-share a system prompt (``--shared-prefix``) reuse the same physical
-prefill blocks: full prompt blocks are keyed by a sha256 hash-chain over
-their tokens and refcounted, and a shared block is immutable — decode
-always extends into a freshly allocated block, never a shared one.
-Greedy outputs are bit-identical to the dense per-slot layout and to the
-one-shot ``generate`` baseline.
+**The admission pipeline** (see ``src/repro/serve/README.md``): a prompt
+is prefilled in ``chunk_size``-token chunks, each right-padded to one of
+2-3 bucket widths so the chunk jit compiles a bounded number of times,
+and at most ``prefill_chunk_budget`` padded tokens of prefill run per
+engine step — decode keeps advancing between the chunks of a long
+prompt, so one long prompt no longer freezes every running request, and
+a short prompt's TTFT no longer hides behind a long neighbour's prefill.
+When requests share a prompt prefix, the paged layout serves it from
+refcounted pool blocks AND skips recomputing it: prefill starts at the
+longest cached block-chain (recomputing at most the final token), and
+freed prefix blocks stay parked on an LRU so hits survive idle periods.
 
-Prints tokens/s, p50/p95 per-request latency, HBM-resident KV bytes, and
-greedy-token agreement between dense and factorized weights.
+Greedy outputs are bit-identical to the dense per-slot layout, to the
+monolithic (single-chunk) prefill, and to the one-shot ``generate``
+baseline — enforced by ``tests/test_chunked_prefill.py``.
+
+Prints tokens/s, p50/p95 per-request latency, TTFT, HBM-resident KV
+bytes, the admission-path profile (tokens computed vs skipped, per-step
+stall), and greedy-token agreement between dense and factorized weights.
 
 Programmatic use::
 
     from repro.serve import ContinuousEngine
     eng = ContinuousEngine(model, cfg, batch=8, max_len=256,
                            max_prompt_len=64, block_size=16,
-                           decode_kernel="pallas")  # fused paged attention
+                           chunk_size=32, prefill_chunk_budget=32,
+                           decode_kernel="pallas")
     eng.submit(prompt_ids, max_new_tokens=32)                  # greedy
     eng.submit(other_ids, max_new_tokens=16, temperature=0.8,
                stop_ids=(eos_id,))
-    for completion in eng.run():
-        print(completion.uid, completion.finish_reason, completion.tokens)
-    print(eng.kv_stats())   # peak resident KV bytes, prefix-cache hits
+    for uid, token, done in eng.stream():      # tokens as they land
+        print(uid, token, done.finish_reason if done else "")
+    print(eng.kv_stats())       # resident KV bytes, prefix-cache hits
+    print(eng.prefill_stats())  # chunks run, tokens computed vs skipped
 """
 
 from repro.launch.serve import main as serve_main

@@ -3,39 +3,101 @@
     PYTHONPATH=src python -m repro.launch.serve --arch paper-tiny \
         --batch 8 --max-len 256 --n-requests 32 \
         [--kv-layout paged --block-size 16 --decode-kernel pallas] \
+        [--chunk-size 32 --buckets 8,16,32 --prefill-budget 32] \
+        [--no-prefix-reuse --prefix-retain 64] [--stream] \
         [--fact-rank 0.5 --solver svd]
 
 Replays a Poisson arrival trace of variable-length prompts through the
 continuous-batching engine (``repro.serve.ContinuousEngine``): requests are
-admitted into recyclable slots mid-flight under one jitted prefill + one
-jitted decode step.  The default KV layout is **paged** — slots share a
-pool of ``--block-size``-token KV blocks through per-slot block tables,
-with refcounted prefix caching for shared prompt prefixes — so
-HBM-resident KV bytes track live tokens instead of ``batch * max_len``
-(``--kv-layout dense`` restores the per-slot lanes for comparison; both
-layouts produce bit-identical greedy tokens).  ``--decode-kernel pallas``
-swaps the paged decode attention from the dense-gather reference to the
-fused Pallas kernel (``repro.kernels.paged_attention`` — KV blocks stream
-through VMEM inside the online-softmax loop; interpret mode off-TPU;
-greedy tokens stay bit-identical).  ``--shared-prefix N`` gives every
-prompt one common N-token system prefix to exercise the prefix cache.  Demonstrates the paper's post-training-factorization use case
-end-to-end — the dense model is factorized with SVD *after* "training"
-(here: at init), then served; tokens/s, p50/p95 latency, and HBM-resident
-KV bytes are printed per variant.
+admitted into recyclable slots mid-flight under one jitted decode step and
+a **chunked, bucketed prefill** — prompts are consumed ``--chunk-size``
+tokens at a time (each span right-padded to a width from ``--buckets``, so
+the chunk jit compiles at 2-3 widths), spending at most
+``--prefill-budget`` padded tokens per engine step so a long prompt's
+prefill interleaves with decode instead of stalling it.
+
+The default KV layout is **paged** — slots share a pool of
+``--block-size``-token KV blocks through per-slot block tables, with
+refcounted prefix caching for shared prompt prefixes — so HBM-resident KV
+bytes track live tokens instead of ``batch * max_len``.  Prefix hits skip
+the *compute* too: prefill starts after the longest cached block-chain
+(``--no-prefix-reuse`` disables), and freed prefix blocks stay parked on
+an LRU (``--prefix-retain`` blocks; default the whole pool) so hits
+survive idle periods.  ``--kv-layout dense`` restores the per-slot lanes
+for comparison; both layouts produce bit-identical greedy tokens.
+``--decode-kernel pallas`` swaps the paged decode attention from the
+dense-gather reference to the fused Pallas kernel
+(``repro.kernels.paged_attention`` — interpret mode off-TPU; greedy
+tokens stay bit-identical).  ``--shared-prefix N`` gives every prompt one
+common N-token system prefix to exercise the prefix cache;
+``--long-frac/--long-prompt`` mix in a heavy prompt tail to exercise
+chunking.
+
+``--stream`` switches from batch replay to the streaming API: tokens are
+printed as SSE-style ``data:`` lines the moment they land
+(``ContinuousEngine.stream()`` / ``on_token``).
+
+Demonstrates the paper's post-training-factorization use case end-to-end —
+the dense model is factorized with SVD *after* "training" (here: at
+init), then served; tokens/s, p50/p95 latency, TTFT, HBM-resident KV
+bytes, and the admission-path profile are printed per variant.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 import jax
+import numpy as np
 
 from repro.configs import get_config
 from repro.core import auto_fact
 from repro.models import build_model
-from repro.serve import (bench_trace, format_kv_stats, format_stats,
+from repro.serve import (ContinuousEngine, bench_trace, format_kv_stats,
+                         format_prefill_stats, format_stats,
                          greedy_agreement, make_trace)
+
+
+def stream_trace(model, cfg, trace, *, out=sys.stdout, **dims) -> int:
+    """SSE-style streaming driver: replay ``trace`` through
+    ``ContinuousEngine.stream()``, printing one ``data:`` line per landed
+    token and an ``event: done`` line per completion.  Returns the number
+    of streamed tokens."""
+    engine = ContinuousEngine(model, cfg, **dims)
+    pending = sorted(trace, key=lambda p: p[0])
+    i, n_tok, ticks = 0, 0, 0
+
+    def feed(_eng=None) -> None:
+        """Submit every arrival due by the step clock (ticks once per
+        engine step via the on_step hook — step_log itself is a bounded
+        deque, so its length cannot serve as a clock)."""
+        nonlocal i, ticks
+        if _eng is not None:
+            ticks += 1
+        while i < len(pending) and pending[i][0] <= ticks:
+            engine.submit(pending[i][1])
+            i += 1
+
+    feed()
+    while i < len(pending) or not engine.scheduler.idle:
+        # feed through the on_step hook, not the yield points: a step can
+        # produce no token while prompts are mid-chunked-prefill, and timed
+        # arrivals must keep flowing into the free slots regardless
+        for uid, tok, comp in engine.stream(on_step=feed):
+            n_tok += 1
+            print(f"data: {json.dumps({'id': uid, 'token': tok})}", file=out)
+            if comp is not None:
+                done = {"id": uid, "reason": comp.finish_reason,
+                        "n_tokens": len(comp.tokens)}
+                print(f"event: done\ndata: {json.dumps(done)}", file=out)
+        if i < len(pending) and engine.scheduler.idle:
+            # idle gap: jump the clock to the next arrival, so the burst
+            # due around it still batches instead of trickling in late
+            ticks = max(ticks, int(np.ceil(pending[i][0])))
+            feed()
+    return n_tok
 
 
 def main(argv=None) -> int:
@@ -59,9 +121,30 @@ def main(argv=None) -> int:
                    default="reference",
                    help="paged decode attention: dense-gather reference or "
                         "the fused Pallas paged-attention kernel")
+    p.add_argument("--chunk-size", type=int, default=32,
+                   help="max prompt tokens consumed per prefill chunk")
+    p.add_argument("--buckets", default="",
+                   help="comma-separated chunk compile widths "
+                        "(default: chunk_size and its halvings)")
+    p.add_argument("--prefill-budget", type=int, default=0,
+                   help="max padded prefill tokens per engine step "
+                        "(0 = chunk_size); decode advances in between")
+    p.add_argument("--no-prefix-reuse", action="store_true",
+                   help="disable prefix-cache compute skip AND retention")
+    p.add_argument("--prefix-retain", type=int, default=-1,
+                   help="freed prefix blocks kept warm on the LRU "
+                        "(-1 = whole pool, 0 = recycle immediately)")
     p.add_argument("--shared-prefix", type=int, default=0,
                    help="common system-prompt tokens prepended to every "
                         "request (prefix-cache workload)")
+    p.add_argument("--long-frac", type=float, default=0.0,
+                   help="fraction of requests drawn as long prompts")
+    p.add_argument("--long-prompt", type=int, default=0,
+                   help="prompt length of the long fraction "
+                        "(default: max_prompt_len minus the shared prefix)")
+    p.add_argument("--stream", action="store_true",
+                   help="print tokens as SSE-style data: lines as they "
+                        "land instead of batch stats")
     p.add_argument("--fact-rank", type=float, default=0.0)
     p.add_argument("--solver", default="svd")
     p.add_argument("--seed", type=int, default=0)
@@ -74,6 +157,9 @@ def main(argv=None) -> int:
                 f"{min_prompt}] so prompts still fit --max-prompt-len")
     if args.kv_layout != "paged" and args.decode_kernel != "reference":
         p.error("--decode-kernel pallas requires --kv-layout paged")
+    long_prompt = args.long_prompt or args.max_prompt_len - args.shared_prefix
+    if not 0 < long_prompt <= args.max_prompt_len - args.shared_prefix:
+        p.error("--long-prompt must fit --max-prompt-len with the prefix")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -83,19 +169,34 @@ def main(argv=None) -> int:
                        min_prompt=min_prompt,
                        max_prompt=args.max_prompt_len - args.shared_prefix,
                        min_new=4, max_new=args.max_new, vocab=cfg.vocab,
-                       shared_prefix=args.shared_prefix)
+                       shared_prefix=args.shared_prefix,
+                       long_frac=args.long_frac, long_prompt=long_prompt)
 
     dims = dict(batch=args.batch, max_len=args.max_len,
                 max_prompt_len=args.max_prompt_len,
-                kv_layout=args.kv_layout)
+                kv_layout=args.kv_layout, chunk_size=args.chunk_size)
+    if args.buckets:
+        dims["buckets"] = tuple(int(b) for b in args.buckets.split(","))
+    if args.prefill_budget:
+        dims["prefill_chunk_budget"] = args.prefill_budget
     if args.kv_layout == "paged":
         dims["block_size"] = args.block_size
         dims["decode_kernel"] = args.decode_kernel
+        dims["prefix_reuse"] = not args.no_prefix_reuse
         if args.n_blocks:
             dims["n_blocks"] = args.n_blocks
+        if args.prefix_retain >= 0:
+            dims["prefix_retain_blocks"] = args.prefix_retain
+
+    if args.stream:
+        n_tok = stream_trace(model, cfg, trace, **dims)
+        print(f": streamed {n_tok} tokens from {args.n_requests} requests")
+        return 0
+
     dense_done, stats = bench_trace(model, cfg, trace, **dims)
     print(format_stats("dense", stats))
     print(format_kv_stats("dense", stats))
+    print(format_prefill_stats("dense", stats))
 
     if args.fact_rank:
         fact, report = auto_fact(model, args.fact_rank, solver=args.solver,
@@ -105,6 +206,7 @@ def main(argv=None) -> int:
         fact_done, fstats = bench_trace(fact, cfg, trace, **dims)
         print(format_stats("factorized", fstats))
         print(format_kv_stats("factorized", fstats))
+        print(format_prefill_stats("factorized", fstats))
         agree = greedy_agreement(dense_done, fact_done)
         print(f"greedy token agreement dense vs factorized: {agree:.1%}")
     return 0

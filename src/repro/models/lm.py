@@ -69,6 +69,12 @@ class DenseBlock(Module):
         x = x + self.mlp(self.mlp_norm(x))
         return x, cache
 
+    def prefill_chunk(self, x, cache, **kw):
+        a, cache = self.attn.prefill_chunk(self.attn_norm(x), cache, **kw)
+        x = x + a
+        x = x + self.mlp(self.mlp_norm(x))
+        return x, cache
+
 
 class MoEBlock(Module):
     attn_norm: RMSNorm
@@ -106,6 +112,15 @@ class MoEBlock(Module):
     def decode(self, x, cache: KVCache, decode_kernel: str = "reference"):
         a, cache = self.attn.decode(self.attn_norm(x), cache,
                                     decode_kernel=decode_kernel)
+        x = x + a
+        x = x + self.mlp(self.mlp_norm(x)).y
+        return x, cache
+
+    def prefill_chunk(self, x, cache, **kw):
+        # capacity-factor routing sees one chunk of tokens at a time here,
+        # so expert-capacity dropping can differ from a monolithic prefill
+        # of the same prompt; exact-capacity configs are unaffected
+        a, cache = self.attn.prefill_chunk(self.attn_norm(x), cache, **kw)
         x = x + a
         x = x + self.mlp(self.mlp_norm(x)).y
         return x, cache
@@ -242,6 +257,54 @@ class TransformerLM(Module):
         new_len = jnp.broadcast_to(idx if idx.ndim == 0 else idx[None, :],
                                    cache.length.shape)
         return logits, new_cache._replace(length=new_len)
+
+    def prefill_chunk(self, tokens: jax.Array, cache, *, slot: jax.Array,
+                      offset: jax.Array, n_valid: jax.Array,
+                      dst: Optional[jax.Array] = None,
+                      need_logits: bool = True):
+        """Consume one bucket-padded prompt chunk for slot ``slot``.
+
+        ``tokens``: (1, W) int32 — ``n_valid`` real tokens starting at
+        absolute position ``offset``, right-padded to the bucket width W.
+        Works on both serving cache layouts (per-slot dense
+        :class:`KVCache` and :class:`PagedKVCache`; for the paged layout
+        ``dst`` carries the flat pool row per chunk position, sentinel for
+        padding/cached-prefix positions — see
+        :meth:`repro.nn.attention.Attention.prefill_chunk`).
+
+        Returns ``(logits (1, vocab) at the chunk's LAST valid position,
+        updated cache)`` — the engine only samples from the logits of a
+        prompt's FINAL chunk, so it traces earlier chunks with
+        ``need_logits=False`` (trace-time constant) and the final-norm +
+        vocab-projection matmul drops out of the mid-prompt chunks
+        entirely; those calls return ``(None, cache)``.
+        """
+        x = constrain_acts(self.embed(tokens))
+        kw = dict(slot=slot, offset=offset, n_valid=n_valid)
+
+        if isinstance(cache, PagedKVCache):
+            table = cache.table
+
+            def body(x, xs):
+                blk, (k, v, ln) = xs
+                y, c2 = blk.prefill_chunk(x, PagedKVCache(k, v, table, ln),
+                                          dst=dst, **kw)
+                return constrain_acts(y), (c2.k, c2.v, c2.length)
+
+            x, (k, v, ln) = jax.lax.scan(
+                body, x, (self.blocks, (cache.k, cache.v, cache.length)))
+            new_cache = PagedKVCache(k, v, table, ln)
+        else:
+            def body(x, xs):
+                blk, c = xs
+                y, c2 = blk.prefill_chunk(x, c, **kw)
+                return constrain_acts(y), c2
+
+            x, new_cache = jax.lax.scan(body, x, (self.blocks, cache))
+        if not need_logits:
+            return None, new_cache
+        last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+        return self._head(self.final_norm(last))[:, 0], new_cache
 
     def decode(self, token: jax.Array, cache, *,
                decode_kernel: str = "reference"):

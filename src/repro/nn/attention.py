@@ -272,6 +272,83 @@ class Attention(Module):
             new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v, 0, axis=1)
         return self.o_proj(out), KVCache(new_k, new_v, jnp.asarray(s, jnp.int32))
 
+    def prefill_chunk(self, x: jax.Array, cache, *, slot: jax.Array,
+                      offset: jax.Array, n_valid: jax.Array,
+                      dst: Optional[jax.Array] = None):
+        """Consume one prompt chunk for ONE slot of a batched serving cache.
+
+        ``x``: (1, W, dim) — a bucket-padded span of the slot's prompt whose
+        first ``n_valid`` rows are real tokens starting at absolute position
+        ``offset`` (RoPE positions, causal mask, and cache writes are all
+        offset-relative, so a prompt can be fed in any chunking and produce
+        the same K/V rows and the same last-token logits as one monolithic
+        prefill).  The chunk attends against everything already resident in
+        the slot's lane — earlier chunks of this prompt AND, for the paged
+        layout, shared prefix blocks written by an earlier request — which
+        is what lets prefix-aware admission *start* after the cached prefix
+        instead of recomputing it.
+
+        Dense per-slot :class:`KVCache`: chunk K/V rows are scattered
+        straight into the slot's lane at ``offset + i`` (padding rows are
+        routed out of range and dropped), and attention gathers the full
+        lane under a ``kpos <= qpos`` mask.
+
+        :class:`PagedKVCache`: ``dst`` gives the flat pool row for each of
+        the W chunk positions — the engine points padding AND cached-prefix
+        positions at the out-of-range sentinel row, so ``mode='drop'``
+        leaves shared blocks untouched (a prefix hit is never rewritten,
+        even with identical bytes) — and attention gathers the slot's
+        logical lane through its block table.
+
+        Returns ``(chunk outputs (1, W, dim), updated cache)`` with the
+        slot's length advanced to ``offset + n_valid``.
+        """
+        if self.window > 0:
+            raise NotImplementedError(
+                "chunked prefill supports global attention only; "
+                "sliding-window layers use the ring-buffer KVCache path")
+        w = x.shape[1]
+        qpos = offset + jnp.arange(w)  # (W,) absolute positions
+        q, k, v = self._qkv(x, positions=qpos[None, :],
+                            kv_positions=qpos[None, :])
+        if isinstance(cache, PagedKVCache):
+            nb, bs, kvh, hd = cache.k.shape
+            max_table = cache.table.shape[1]
+            pool_k = cache.k.reshape(nb * bs, kvh, hd)
+            pool_v = cache.v.reshape(nb * bs, kvh, hd)
+            pool_k = pool_k.at[dst].set(k[0].astype(pool_k.dtype),
+                                        mode="drop")
+            pool_v = pool_v.at[dst].set(v[0].astype(pool_v.dtype),
+                                        mode="drop")
+            kpos = jnp.arange(max_table * bs)
+            rows = cache.table[slot, kpos // bs] * bs + kpos % bs
+            gk = pool_k[rows][None].astype(x.dtype)  # (1, S, kvh, hd)
+            gv = pool_v[rows][None].astype(x.dtype)
+            valid = kpos[None, :] <= qpos[:, None]  # (W, S)
+            out = self._attend(q, gk, gv, valid[None, None])
+            length = cache.length.at[slot].set(offset + n_valid)
+            new_cache = PagedKVCache(pool_k.reshape(cache.k.shape),
+                                     pool_v.reshape(cache.v.shape),
+                                     cache.table, length)
+        else:
+            if self._is_ring(cache):
+                raise NotImplementedError(
+                    "chunked prefill has no ring-buffer path")
+            max_len = cache.k.shape[1]
+            wpos = jnp.where(jnp.arange(w) < n_valid, qpos, max_len)
+            new_k = cache.k.at[slot, wpos].set(k[0].astype(cache.k.dtype),
+                                               mode="drop")
+            new_v = cache.v.at[slot, wpos].set(v[0].astype(cache.v.dtype),
+                                               mode="drop")
+            kpos = jnp.arange(max_len)
+            valid = kpos[None, :] <= qpos[:, None]  # (W, max_len)
+            out = self._attend(q, new_k[slot][None].astype(x.dtype),
+                               new_v[slot][None].astype(x.dtype),
+                               valid[None, None])
+            length = cache.length.at[slot].set(offset + n_valid)
+            new_cache = KVCache(new_k, new_v, length)
+        return self.o_proj(out), new_cache
+
     def decode(self, x: jax.Array, cache, *,
                decode_kernel: str = "reference") -> tuple[jax.Array, "KVCache"]:
         """One-token decode step. x: (batch, 1, dim).
@@ -315,9 +392,13 @@ class Attention(Module):
         else:
             kpos = jnp.arange(cache.k.shape[1])
             if per_slot:
+                # mode='drop': a row parked at pos == max_len (slot frozen by
+                # cache_full eviction, or mid-chunked-prefill with its write
+                # frontier owned by prefill_chunk) must write NOWHERE — the
+                # default clip would smear stale K/V into the last lane row
                 rows = jnp.arange(b)
-                new_k = cache.k.at[rows, pos].set(k[:, 0])
-                new_v = cache.v.at[rows, pos].set(v[:, 0])
+                new_k = cache.k.at[rows, pos].set(k[:, 0], mode="drop")
+                new_v = cache.v.at[rows, pos].set(v[:, 0], mode="drop")
                 valid = kpos[None, :] <= pos[:, None]
                 if self.window > 0:
                     valid = valid & (kpos[None, :] > pos[:, None] - self.window)

@@ -1,26 +1,32 @@
-"""Serving subsystem: continuous batching over a paged KV cache.
+"""Serving subsystem: continuous batching over a paged KV cache with
+chunked, prefix-aware, bucketed prefill.  (``README.md`` in this package
+walks the full admission pipeline.)
 
-Four layers:
+Five modules:
 
 * ``repro.serve.engine`` — device execution.  ``generate`` (one-shot
   prefill + scan decode, the equivalence baseline), ``Engine`` (lock-step
   fixed batch, kept for SSM/encdec caches), and ``ContinuousEngine``: a
-  fixed slot batch where requests join and leave mid-flight under ONE
-  jitted prefill and ONE jitted decode step.  The default KV layout is
-  **paged**: all slots share a pool of ``block_size``-token KV blocks
-  (``PagedKVCache.k/v: (n_layers, n_blocks, block_size, kv_heads,
-  head_dim)``) and each slot maps logical position ``p`` to pool row
-  ``table[slot, p // block_size] * block_size + p % block_size`` through
-  its block-table row (``table: (batch, ceil(max_len / block_size))``
-  int32, sentinel ``n_blocks`` for unmapped entries).  Decode is a
-  gather/scatter against the table inside the same single jitted step;
-  HBM spent on KV is proportional to live tokens, not ``batch *
-  max_len``.  ``kv_layout="dense"`` keeps the original per-slot lanes as
-  the bit-exactness baseline, and ``decode_kernel="pallas"`` swaps the
-  paged decode gather+attention for the fused
+  fixed slot batch where requests join and leave mid-flight.  Prompts
+  are prefilled in bucket-padded chunks (2-3 compile widths) under a
+  per-step token budget, interleaved with ONE jitted batched decode
+  step — a long prompt never freezes the running decode lanes.  The
+  default KV layout is **paged**: all slots share a pool of
+  ``block_size``-token KV blocks (``PagedKVCache.k/v: (n_layers,
+  n_blocks, block_size, kv_heads, head_dim)``) and each slot maps
+  logical position ``p`` to pool row ``table[slot, p // block_size] *
+  block_size + p % block_size`` through its block-table row (``table:
+  (batch, ceil(max_len / block_size))`` int32, sentinel ``n_blocks`` for
+  unmapped entries); HBM spent on KV is proportional to live tokens, not
+  ``batch * max_len``.  A prompt whose prefix is already resident starts
+  prefilling AFTER the cached blocks (compute skipped, not just memory).
+  ``kv_layout="dense"`` keeps the original per-slot lanes as the
+  bit-exactness baseline, and ``decode_kernel="pallas"`` swaps the paged
+  decode gather+attention for the fused
   :func:`repro.kernels.paged_attention` kernel (KV blocks stream through
   VMEM inside an online-softmax loop; greedy tokens bit-identical to the
-  ``"reference"`` dense-gather path).
+  ``"reference"`` dense-gather path).  ``stream()`` / ``on_token`` yield
+  tokens as they land.
 * ``repro.serve.paging`` — host block bookkeeping.  Refcounted
   ``BlockAllocator`` over the pool, ``PrefixCache`` keyed by sha256
   hash-chains over *full* prompt blocks (``key_i = sha256(key_{i-1} ||
@@ -30,40 +36,59 @@ Four layers:
   without the copy), and ``PagedCacheManager``, which reserves
   ``ceil(min(prompt_len + max_new, max_len) / block_size)`` blocks per
   request at admission so decode can never run out of blocks
-  mid-request.
+  mid-request, reports the longest cached block-chain so prefill can
+  skip it, gates same-step dependents until their provider's chunks
+  publish the shared blocks, and parks freed prefix blocks on an LRU so
+  hits survive idle periods.
 * ``repro.serve.scheduler`` — host lifecycle.  FIFO pending queue,
-  admit -> prefill -> decode -> finish/evict, slot recycling.  When the
-  block pool cannot hold the head request's reservation, admission
-  defers (head-of-line, so FIFO order is preserved and nothing starves)
-  and resumes as finished requests free their blocks.
+  admit -> PREFILLING (chunks in flight) -> bind -> decode ->
+  finish/evict, slot recycling.  When the block pool cannot hold the
+  head request's reservation, admission defers (head-of-line, so FIFO
+  order is preserved and nothing starves) and resumes as finished
+  requests free their blocks.
+* ``repro.serve.sampling`` — the one greedy/temperature sampler every
+  engine shares (Gumbel-max merge of greedy and sampled rows).
 * ``repro.serve.trace`` — Poisson arrival traces (optionally with a
-  shared system-prompt prefix), replay, latency + KV-memory stats.
+  shared system-prompt prefix and/or a long-prompt tail), replay,
+  latency + KV-memory + admission-stall stats.
 
-Greedy outputs are bit-identical across ``generate``, ``Engine``, and
-both ``ContinuousEngine`` layouts — enforced by the differential harness
-in ``tests/test_paging.py``.
+Greedy outputs are bit-identical across ``generate``, ``Engine``, both
+``ContinuousEngine`` layouts, and any prefill chunking — enforced by the
+differential harnesses in ``tests/test_paging.py`` and
+``tests/test_chunked_prefill.py``.  One carve-out: capacity-factor MoE
+routing is sequence-length-dependent, so MoE prompts see slightly
+different expert-capacity dropping under any padding or chunking of the
+prefill (this was already true of the monolithic padded prefill vs
+exact-length ``generate``); the bit-identity contract covers
+capacity-exact models.
 
 Quick use::
 
     eng = ContinuousEngine(model, cfg, batch=8, max_len=256,
-                           max_prompt_len=64, block_size=16)
+                           max_prompt_len=64, block_size=16,
+                           chunk_size=32, prefill_chunk_budget=32)
     eng.submit([1, 2, 3], max_new_tokens=16)           # greedy
     eng.submit(prompt2, max_new_tokens=8, temperature=0.7, stop_ids=(0,))
     completions = eng.run()                            # drain the queue
-    print(eng.kv_stats())  # peak HBM-resident KV bytes, prefix hits, ...
+    for uid, tok, done in eng.stream(): ...            # or stream tokens
+    print(eng.kv_stats())       # resident KV bytes, prefix hits, ...
+    print(eng.prefill_stats())  # chunks, computed vs skipped tokens, ...
 """
 
 from repro.nn.attention import UnsupportedCacheError
 from repro.serve.engine import ContinuousEngine, Engine, generate
 from repro.serve.paging import (BlockAllocator, PagedCacheManager,
                                 PrefixCache, chain_keys)
+from repro.serve.sampling import greedy_tokens, sample_tokens
 from repro.serve.scheduler import Completion, Request, Scheduler
-from repro.serve.trace import (bench_trace, format_kv_stats, format_stats,
+from repro.serve.trace import (bench_trace, format_kv_stats,
+                               format_prefill_stats, format_stats,
                                greedy_agreement, latency_stats, make_trace,
-                               replay)
+                               replay, stall_stats)
 
 __all__ = ["Engine", "ContinuousEngine", "generate", "Request", "Completion",
            "Scheduler", "BlockAllocator", "PagedCacheManager", "PrefixCache",
            "UnsupportedCacheError", "chain_keys", "make_trace", "replay",
-           "latency_stats", "format_stats", "format_kv_stats", "bench_trace",
-           "greedy_agreement"]
+           "latency_stats", "stall_stats", "format_stats", "format_kv_stats",
+           "format_prefill_stats", "bench_trace", "greedy_agreement",
+           "greedy_tokens", "sample_tokens"]

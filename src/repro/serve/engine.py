@@ -6,15 +6,22 @@ baseline, and the continuous-batching ``ContinuousEngine``.
 decodes together — still the right tool for SSM/encdec caches and for
 bit-exactness baselines).  ``ContinuousEngine`` is the serving system:
 requests are admitted into recyclable slots mid-flight, each slot carrying
-its own KV-cache lane, position counter, and sampling params, under ONE
-jitted prefill and ONE jitted decode step — no recompiles as traffic
-arrives.  See ``repro.serve.scheduler`` for the request lifecycle and
+its own KV-cache lane, position counter, and sampling params.  Prompts are
+prefilled in **bucket-padded chunks interleaved with decode steps** — a
+long prompt no longer freezes the running decode lanes for its whole
+prefill, and a prompt whose prefix is already resident in the paged pool
+starts prefilling *after* the cached blocks instead of recomputing them.
+See ``repro.serve.scheduler`` for the request lifecycle,
+``repro.serve.paging`` for block/prefix bookkeeping, and
 ``repro.serve.trace`` for workload replay.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Sequence
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Iterator, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +29,7 @@ import numpy as np
 
 from repro.nn.attention import UnsupportedCacheError
 from repro.serve.paging import PagedCacheManager
+from repro.serve.sampling import greedy_tokens, sample_tokens
 from repro.serve.scheduler import Completion, Request, Scheduler
 
 
@@ -31,20 +39,17 @@ def generate(model, tokens: jax.Array, cache, *, n_steps: int,
 
     Returns (generated (batch, n_steps), final cache)."""
     logits, cache = model.prefill(tokens, cache)
-
-    def sample(logits, k):
-        if temperature <= 0.0:
-            return jnp.argmax(logits[:, -1], axis=-1)
-        return jax.random.categorical(k, logits[:, -1] / temperature)
+    batch = tokens.shape[0]
+    temp = jnp.full((batch,), temperature, jnp.float32)
 
     if key is None:
         key = jax.random.PRNGKey(0)
-    first = sample(logits, key)
+    first = sample_tokens(logits[:, -1], temp, key)
 
     def step(carry, k):
         tok, cache = carry
         logits, cache = model.decode(tok[:, None], cache)
-        nxt = sample(logits, k)
+        nxt = sample_tokens(logits[:, -1], temp, k)
         return (nxt, cache), tok
 
     keys = jax.random.split(jax.random.fold_in(key, 1), n_steps)
@@ -84,10 +89,10 @@ class Engine:
 
     def greedy(self, tokens: jax.Array, n_steps: int) -> jax.Array:
         logits = self.prefill(tokens)
-        out = [jnp.argmax(logits[:, -1], -1)]
+        out = [greedy_tokens(logits[:, -1])]
         for _ in range(n_steps - 1):
             logits = self.decode_step(out[-1][:, None])
-            out.append(jnp.argmax(logits[:, -1], -1))
+            out.append(greedy_tokens(logits[:, -1]))
         return jnp.stack(out, axis=1)
 
 
@@ -107,48 +112,74 @@ class _SlotArrays(NamedTuple):
     stop_ids: jax.Array  # (B, K) int32, -1 padded
 
 
-def _sample(logits: jax.Array, temp: jax.Array, key: jax.Array) -> jax.Array:
-    """Per-row temperature sampling: greedy rows and sampled rows coexist
-    in one batch (Gumbel-max so a single argmax serves both branches)."""
-    greedy = jnp.argmax(logits, axis=-1)
-    g = jax.random.gumbel(key, logits.shape, jnp.float32)
-    t = jnp.maximum(temp, 1e-6)[:, None]
-    sampled = jnp.argmax(logits.astype(jnp.float32) / t + g, axis=-1)
-    return jnp.where(temp > 0, sampled, greedy).astype(jnp.int32)
+@dataclass
+class _PrefillTask:
+    """Host mirror of one in-flight chunked prefill."""
+
+    req: Request
+    slot: int
+    seq: int             # admission order (chunks advance round-robin in seq)
+    plen: int
+    cached: int          # leading tokens resident via prefix hit (no write)
+    consumed: int        # prompt positions fed so far (starts at skip point)
+    hit_bids: Tuple[int, ...] = ()   # shared blocks the chunks read
+    logits: Optional[jax.Array] = None  # (1, vocab) from the latest chunk
+    chunks: int = 0
 
 
 class ContinuousEngine:
     """Continuous-batching serving engine over a fixed slot batch.
 
-    Requests join and leave mid-flight: a prefill runs on a single-row lane
-    (prompts right-padded to ``max_prompt_len`` so the jit compiles once),
-    the lane's K/V rows are committed into the batched cache at the free
-    slot, and the batched decode step advances every active slot at its own
-    position.  Stop-token / max-token / cache-full eviction is computed
-    in-graph from batched per-request params; the host scheduler only
-    mirrors the lifecycle and collects tokens.
+    Requests join and leave mid-flight.  ``step()`` is a small policy
+    loop::
 
-    Two KV layouts (``kv_layout``):
+        admit  — pop FIFO-pending requests into free slots while the block
+                 reservation fits (paged); no compute happens here
+        chunk  — advance in-flight prefills in a ROTATING round-robin,
+                 one bucket-padded chunk at a time, spending at most
+                 ``prefill_chunk_budget`` padded tokens per step (a long
+                 prompt's prefill spreads over many steps; the decode
+                 lanes below keep moving, and the rotation means a short
+                 prompt behind a long one binds in its own step instead
+                 of waiting out the whole long prefill)
+        bind   — a prefill that consumed its whole prompt samples its first
+                 token from the final chunk's logits and joins the decode
+                 batch (this is the TTFT moment)
+        decode — ONE jitted batched decode step advances every bound slot
+                 at its own position; stop/max/cache-full eviction computed
+                 in-graph
 
-    * ``"paged"`` (default) — all slots share one pool of
-      ``block_size``-token KV blocks (:class:`repro.nn.attention.
-      PagedKVCache`); a host-side :class:`~repro.serve.paging.
-      PagedCacheManager` reserves ``ceil(min(prompt+max_new, max_len) /
-      block_size)`` blocks per request at admission (so decode can never
-      exhaust the pool mid-request), shares full prompt blocks between
-      requests with equal prefixes (hash-keyed, refcounted), and defers
-      FIFO admission while the pool is out of blocks.  HBM spent on KV is
-      proportional to live tokens instead of ``batch * max_len``.
-    * ``"dense"`` — the original per-slot layout: every slot reserves a
-      dense ``max_len`` lane, spliced with ``lax.dynamic_update_slice``.
-      Kept as the bit-exactness baseline and for the benchmark comparison.
+    **Chunked + bucketed prefill.**  A prompt is consumed ``chunk_size``
+    tokens at a time; each span is right-padded to the smallest width in
+    ``buckets`` that fits, so the chunk jit compiles at 2–3 widths instead
+    of one ``max_prompt_len`` pad (and instead of per-prompt-length
+    recompiles).  Chunk K/V rows scatter into the slot's lane (dense) or
+    freshly reserved pool blocks (paged) at the chunk's position offset;
+    chunk attention sees everything before it, so any chunking of a prompt
+    is bit-identical to the monolithic prefill.
 
-    ``decode_kernel`` (paged layout only) picks the decode attention
-    implementation: ``"reference"`` materializes the dense gather from
-    the pool before masked attention; ``"pallas"`` runs the fused
-    :func:`repro.kernels.paged_attention` kernel, streaming KV blocks
-    through VMEM inside an online-softmax loop (interpret mode off-TPU).
-    Greedy tokens are bit-identical between the two.
+    **Prefix-aware admission (paged only).**  Admission asks the
+    :class:`~repro.serve.paging.PagedCacheManager` for the longest cached
+    block-chain matching the prompt; hit blocks are attached to the slot's
+    table and prefill STARTS at the hit boundary — cached prefix compute is
+    skipped, not just its memory (when the whole prompt hits, only the
+    final token is recomputed to produce first-sample logits).  Freed
+    prefix blocks are parked on an LRU (``prefix_retain_blocks``) so hits
+    survive idle periods.  A prefill whose hit blocks were registered by a
+    still-running prefill waits until the provider publishes them.
+
+    Two KV layouts (``kv_layout``): ``"paged"`` (default) — all slots
+    share one pool of ``block_size``-token KV blocks with per-slot block
+    tables, reservation-based admission, refcounted prefix sharing;
+    ``"dense"`` — per-slot ``max_len`` lanes, kept as the bit-exactness
+    baseline.  ``decode_kernel`` (paged only) picks the decode attention:
+    ``"reference"`` dense-gather or ``"pallas"`` fused
+    :func:`repro.kernels.paged_attention` (interpret mode off-TPU).
+    Greedy tokens are bit-identical across all of it.
+
+    Streaming: ``stream()`` yields ``(uid, token, completion|None)`` as
+    tokens land, and ``on_token`` (callable ``(uid, token)``) fires inside
+    ``step()`` for push-style consumers.
 
     Requires a global-attention KV cache (``cfg.window == 0``) — ring-buffer
     lanes cannot be slot-recycled or paged yet (see ROADMAP).
@@ -159,7 +190,12 @@ class ContinuousEngine:
                  cache_dtype=jnp.float32, seed: int = 0,
                  kv_layout: str = "paged", block_size: int = 16,
                  n_blocks: Optional[int] = None,
-                 decode_kernel: str = "reference"):
+                 decode_kernel: str = "reference",
+                 chunk_size: int = 32,
+                 buckets: Optional[Sequence[int]] = None,
+                 prefill_chunk_budget: Optional[int] = None,
+                 prefix_reuse: bool = True,
+                 prefix_retain_blocks: Optional[int] = None):
         if cfg.window:
             raise UnsupportedCacheError(
                 "continuous batching needs a global-attention KV cache "
@@ -178,11 +214,36 @@ class ContinuousEngine:
             raise ValueError(
                 "decode_kernel='pallas' is the fused paged-attention "
                 "kernel; it requires kv_layout='paged'")
+        if chunk_size < 1:
+            raise ValueError("need chunk_size >= 1")
+        if buckets is None:
+            # 2-3 compile widths: chunk_size plus halvings, so short prompts
+            # and final partial chunks don't pay the full chunk pad
+            buckets = sorted({max(1, chunk_size // 4),
+                              max(1, chunk_size // 2), chunk_size})
+        buckets = tuple(sorted(set(int(b) for b in buckets)))
+        if not buckets or buckets[0] < 1:
+            raise ValueError("buckets must be positive widths")
+        if buckets[-1] < chunk_size:
+            raise ValueError(
+                f"largest bucket {buckets[-1]} < chunk_size {chunk_size}: "
+                "a full chunk would not fit any compile width")
+        self.chunk_size, self.buckets = chunk_size, buckets
+        self.prefill_chunk_budget = (chunk_size if prefill_chunk_budget
+                                     is None else prefill_chunk_budget)
+        if self.prefill_chunk_budget < 1:
+            raise ValueError("need prefill_chunk_budget >= 1")
         self.decode_kernel = decode_kernel
         self.model, self.cfg = model, cfg
         self.batch, self.max_len = batch, max_len
         self.max_prompt_len, self.max_stop_ids = max_prompt_len, max_stop_ids
         self.kv_layout, self.cache_dtype = kv_layout, jnp.dtype(cache_dtype)
+        if not hasattr(model, "prefill_chunk"):
+            raise UnsupportedCacheError(
+                f"{type(model).__name__} has no chunked-prefill path; "
+                "continuous batching admits prompts chunk by chunk",
+                roadmap_item="extend per-slot state to Mamba conv/ssm "
+                "states and Whisper enc caches")
         if kv_layout == "paged":
             if block_size < 1:
                 raise ValueError("need block_size >= 1")
@@ -198,11 +259,14 @@ class ContinuousEngine:
             self.cache = model.init_paged_cache(
                 batch, max_len, cfg, n_blocks=self.n_blocks,
                 block_size=block_size, dtype=cache_dtype)
+            retain = (self.n_blocks if prefix_retain_blocks is None
+                      else prefix_retain_blocks)
             self.manager = PagedCacheManager(
                 n_blocks=self.n_blocks, block_size=block_size, batch=batch,
-                max_len=max_len)
+                max_len=max_len, retain_blocks=retain if prefix_reuse else 0,
+                prefix_reuse=prefix_reuse)
             self._table_dirty = False
-            lane_len = max_prompt_len
+            self._park_pos = self.manager.max_table * block_size
         else:
             try:
                 self.cache = model.init_cache(batch, max_len, cfg,
@@ -215,8 +279,7 @@ class ContinuousEngine:
                     roadmap_item="extend per-slot state to Mamba conv/ssm "
                     "states and Whisper enc caches")
             self.manager = None
-            lane_len = max_len
-        self._lane0 = model.init_cache(1, lane_len, cfg, dtype=cache_dtype)
+            self._park_pos = max_len
         self.state = _SlotArrays(
             tok=jnp.zeros((batch,), jnp.int32),
             active=jnp.zeros((batch,), bool),
@@ -228,13 +291,31 @@ class ContinuousEngine:
         self.scheduler = Scheduler(batch)
         self._base_key = jax.random.PRNGKey(seed)
         self._tick = 0
+        self._prefills: dict = {}  # slot -> _PrefillTask
+        self._admit_seq = 0
+        self._rr_seq = 0  # last admission seq served a chunk (rotation)
+        self.on_token: Optional[Callable[[int, int], None]] = None
+        self._step_events: list = []  # (uid, token) landed this step
+        # prefill accounting (prefill_stats() / benchmarks); bounded like
+        # scheduler.admitted so a long-lived server cannot leak step dicts
+        self.step_log: deque = deque(maxlen=65536)
+        self._prompt_tokens_admitted = 0
+        self._prefill_tokens_computed = 0  # true prompt tokens run
+        self._prefill_tokens_padded = 0    # bucket widths run (compute cost)
+        self._prefix_skipped_tokens = 0    # prompt tokens never recomputed
+        self._prefill_chunks = 0
+        self._max_step_prefill_tokens = 0
 
-        def prefill_fn(toks, lane, length, temp, key):
-            logits, lane = model.prefill(toks, lane, length=length)
-            first = _sample(logits[:, 0], temp[None], key)[0]
-            return first, lane
+        def chunk_fn(need_logits, toks, cache, slot, offset, n_valid,
+                     dst=None):
+            kw = {} if dst is None else {"dst": dst}
+            return model.prefill_chunk(toks, cache, slot=slot, offset=offset,
+                                       n_valid=n_valid,
+                                       need_logits=need_logits, **kw)
 
-        def bind_state(state, slot, length, first, temp, max_new, stop_row):
+        def bind_fn(state, slot, logits, length, temp, max_new, stop_row,
+                    key):
+            first = sample_tokens(logits, temp[None], key)[0]
             done0 = (jnp.any(first == stop_row) | (max_new <= 1)
                      | (length >= max_len))
             state = state._replace(
@@ -245,37 +326,7 @@ class ContinuousEngine:
                 max_new=state.max_new.at[slot].set(max_new),
                 stop_ids=state.stop_ids.at[slot].set(stop_row),
             )
-            return state, done0
-
-        def admit_fn(cache, state, lane, slot, length, first, temp,
-                     max_new, stop_row):
-            k = jax.lax.dynamic_update_slice(cache.k, lane.k,
-                                             (0, slot, 0, 0, 0))
-            v = jax.lax.dynamic_update_slice(cache.v, lane.v,
-                                             (0, slot, 0, 0, 0))
-            ln = cache.length.at[:, slot].set(length)
-            state, done0 = bind_state(state, slot, length, first, temp,
-                                      max_new, stop_row)
-            return cache._replace(k=k, v=v, length=ln), state, done0
-
-        def commit_fn(cache, state, lane, dst, slot, length, first, temp,
-                      max_new, stop_row):
-            # scatter the lane's first `length` K/V rows into the pool
-            # blocks picked by the allocator; `dst` points cached-prefix and
-            # padding positions at the out-of-range sentinel row, so
-            # mode='drop' leaves shared blocks untouched
-            L, nb, bs = cache.k.shape[:3]
-            tail = cache.k.shape[3:]
-            pool_k = cache.k.reshape(L, nb * bs, *tail)
-            pool_v = cache.v.reshape(L, nb * bs, *tail)
-            pool_k = pool_k.at[:, dst].set(lane.k[:, 0], mode="drop")
-            pool_v = pool_v.at[:, dst].set(lane.v[:, 0], mode="drop")
-            ln = cache.length.at[:, slot].set(length)
-            state, done0 = bind_state(state, slot, length, first, temp,
-                                      max_new, stop_row)
-            return cache._replace(k=pool_k.reshape(cache.k.shape),
-                                  v=pool_v.reshape(cache.v.shape),
-                                  length=ln), state, done0
+            return state, first, done0
 
         if self.manager is not None:
             # paged decode takes the kernel knob; dense/per-slot model
@@ -289,7 +340,7 @@ class ContinuousEngine:
 
         def decode_fn(cache, state, key):
             logits, new_cache = model_decode(state.tok[:, None], cache)
-            nxt = _sample(logits[:, 0], state.temp, key)
+            nxt = sample_tokens(logits[:, 0], state.temp, key)
             nxt = jnp.where(state.active, nxt, state.tok)
             # frozen slots keep their cache position and token
             length = jnp.where(state.active[None, :], new_cache.length,
@@ -302,9 +353,15 @@ class ContinuousEngine:
                                    n_gen=n_gen)
             return new_cache._replace(length=length), state, nxt, done
 
-        self._prefill = jax.jit(prefill_fn)
-        self._admit = jax.jit(commit_fn if self.manager is not None
-                              else admit_fn, donate_argnums=(0, 1))
+        # ONE jit per role; the chunk jits specialize per bucket width (the
+        # buckets bound how many widths ever occur).  Mid-prompt chunks use
+        # the logits-free variant — only a prompt's FINAL chunk pays the
+        # final-norm + vocab-projection matmul
+        self._chunk_last = jax.jit(
+            lambda *a: chunk_fn(True, *a), donate_argnums=(1,))
+        self._chunk_mid = jax.jit(
+            lambda *a: chunk_fn(False, *a), donate_argnums=(1,))
+        self._bind = jax.jit(bind_fn, donate_argnums=(0,))
         self._decode = jax.jit(decode_fn, donate_argnums=(0, 1))
 
     # -- request intake ------------------------------------------------------
@@ -369,53 +426,172 @@ class ContinuousEngine:
             self._table_dirty = True
         return self.scheduler.finish(slot, reason)
 
+    def _flush_table(self) -> None:
+        if self.manager is not None and self._table_dirty:
+            self.cache = self.cache._replace(
+                table=jnp.asarray(self.manager.tables))
+            self._table_dirty = False
+
+    def _emit(self, uid: int, token: int) -> None:
+        self._step_events.append((uid, int(token)))
+        if self.on_token is not None:
+            self.on_token(uid, int(token))
+
+    def _bucket_width(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    def _begin_prefill(self, slot: int, req: Request) -> None:
+        """Reserve the slot (and, paged, its blocks) for a request; chunks
+        run later under the step budget."""
+        plen = int(req.prompt.size)
+        if self.manager is not None:
+            cached, hit_bids = self.manager.admit(slot, req.prompt,
+                                                  self._total_tokens(req))
+            self._table_dirty = True
+        else:
+            cached, hit_bids = 0, ()
+        # start AFTER the resident prefix — but always recompute at least
+        # the final token: its logits seed the first sample
+        start = min(cached, plen - 1)
+        self._admit_seq += 1
+        self._prefills[slot] = _PrefillTask(
+            req=req, slot=slot, seq=self._admit_seq, plen=plen,
+            cached=cached, consumed=start, hit_bids=hit_bids)
+        self.scheduler.begin_prefill(slot, req)
+        self._prompt_tokens_admitted += plen
+        self._prefix_skipped_tokens += start
+        # park the slot's write frontier out of range: the batched decode
+        # step still scatters a K/V row for every slot, and a prefilling
+        # slot's stale position could point anywhere — including, in the
+        # paged layout, INSIDE a shared prefix block it just mapped
+        self.cache = self.cache._replace(
+            length=self.cache.length.at[:, slot].set(self._park_pos))
+
+    def _chunk_extent(self, task: _PrefillTask) -> Tuple[int, int]:
+        """(true length, padded bucket width) of the task's next chunk —
+        the ONE sizing formula both the budget check and the chunk run
+        consult."""
+        l = min(self.chunk_size, task.plen - task.consumed)
+        return l, self._bucket_width(l)
+
+    def _run_chunk(self, task: _PrefillTask, l: int, w: int) -> int:
+        """Feed one bucket-padded chunk of extent ``(l, w)`` (from
+        :meth:`_chunk_extent`); returns the padded width spent."""
+        toks = np.zeros((1, w), np.int32)
+        toks[0, :l] = task.req.prompt[task.consumed:task.consumed + l]
+        final = task.consumed + l >= task.plen
+        run = self._chunk_last if final else self._chunk_mid
+        args = (jnp.asarray(toks), self.cache,
+                jnp.asarray(task.slot, jnp.int32),
+                jnp.asarray(task.consumed, jnp.int32),
+                jnp.asarray(l, jnp.int32))
+        if self.manager is not None:
+            dst = self.manager.scatter_rows(task.slot, task.consumed, w,
+                                            lo=task.cached, hi=task.plen)
+            logits, self.cache = run(*args, jnp.asarray(dst))
+        else:
+            logits, self.cache = run(*args)
+        if final:
+            task.logits = logits
+        task.consumed += l
+        task.chunks += 1
+        if self.manager is not None:
+            self.manager.publish(task.slot, task.consumed)
+        self._prefill_tokens_computed += l
+        self._prefill_tokens_padded += w
+        self._prefill_chunks += 1
+        return w
+
+    def _complete_prefill(self, task: _PrefillTask) -> list:
+        """Sample the first token from the final chunk's logits and move
+        the slot into the decode batch (possibly finishing immediately)."""
+        req = task.req
+        stop_row = np.full((self.max_stop_ids,), -1, np.int32)
+        stop_row[:len(req.stop_ids)] = req.stop_ids
+        self.state, first, done0 = self._bind(
+            self.state, jnp.asarray(task.slot, jnp.int32), task.logits,
+            jnp.asarray(task.plen, jnp.int32),
+            jnp.asarray(req.temperature, jnp.float32),
+            jnp.asarray(req.max_new_tokens, jnp.int32),
+            jnp.asarray(stop_row), self._next_key())
+        del self._prefills[task.slot]
+        self.scheduler.bind(task.slot, req, int(first))
+        self._emit(req.uid, int(first))
+        if bool(done0):
+            return [self._finish(task.slot, task.plen)]
+        return []
+
+    def _advance_prefills(self) -> Tuple[list, int]:
+        """Run chunks round-robin under the step budget, ROTATING the
+        starting task across steps: the service order picks up after the
+        last task that got a chunk, so when the per-step budget only
+        covers one chunk, a short prompt admitted behind a long one still
+        gets its turn on the next step instead of waiting out the long
+        prompt's whole prefill (the head-of-line stall chunking exists to
+        remove).  Always makes progress when any prefill is runnable — a
+        budget smaller than the smallest bucket still advances one chunk
+        per step.  A task whose prefix-hit blocks are still being written
+        by an earlier prefill is skipped until they publish."""
+        finished: list = []
+        spent = 0
+        progressed = True
+        while self._prefills and progressed:
+            progressed = False
+            tasks = sorted(self._prefills.values(), key=lambda t: t.seq)
+            pivot = next((i for i, t in enumerate(tasks)
+                          if t.seq > self._rr_seq), 0)
+            for task in tasks[pivot:] + tasks[:pivot]:
+                if self.manager is not None and not \
+                        self.manager.blocks_ready(task.hit_bids):
+                    continue
+                l, w = self._chunk_extent(task)
+                if spent and spent + w > self.prefill_chunk_budget:
+                    return finished, spent
+                spent += self._run_chunk(task, l, w)
+                self._rr_seq = task.seq
+                progressed = True
+                if task.consumed >= task.plen:
+                    finished.extend(self._complete_prefill(task))
+        return finished, spent
+
     def step(self) -> list:
-        """Admit pending requests into free slots, then run one batched
-        decode step.  Returns the :class:`Completion`s finished this step."""
+        """One scheduling round: admit, chunk prefills under the budget,
+        bind finished prefills, then one batched decode step.  Returns the
+        :class:`Completion`s finished this step."""
+        t0 = time.monotonic()
         finished = []
+        self._step_events = []
         while (adm := self._next_admission()) is not None:
-            slot, req = adm
-            toks = np.zeros((1, self.max_prompt_len), np.int32)
-            toks[0, :req.prompt.size] = req.prompt
-            stop_row = np.full((self.max_stop_ids,), -1, np.int32)
-            stop_row[:len(req.stop_ids)] = req.stop_ids
-            first, lane = self._prefill(
-                jnp.asarray(toks), self._lane0,
-                jnp.asarray(req.prompt.size, jnp.int32),
-                jnp.asarray(req.temperature, jnp.float32), self._next_key())
-            args = (jnp.asarray(slot, jnp.int32),
-                    jnp.asarray(req.prompt.size, jnp.int32), first,
-                    jnp.asarray(req.temperature, jnp.float32),
-                    jnp.asarray(req.max_new_tokens, jnp.int32),
-                    jnp.asarray(stop_row))
-            if self.manager is not None:
-                _, dst = self.manager.admit(slot, req.prompt,
-                                            self._total_tokens(req),
-                                            self.max_prompt_len)
-                self._table_dirty = True
-                self.cache, self.state, done0 = self._admit(
-                    self.cache, self.state, lane, jnp.asarray(dst), *args)
-            else:
-                self.cache, self.state, done0 = self._admit(
-                    self.cache, self.state, lane, *args)
-            self.scheduler.bind(slot, req, int(first))
-            if bool(done0):
-                finished.append(self._finish(slot, req.prompt.size))
+            self._begin_prefill(*adm)
+        prefill_spent = 0
+        if self._prefills:
+            self._flush_table()
+            done, prefill_spent = self._advance_prefills()
+            finished.extend(done)
+            self._max_step_prefill_tokens = max(
+                self._max_step_prefill_tokens, prefill_spent)
 
         running = self.scheduler.running_slots()
         if running:
-            if self.manager is not None and self._table_dirty:
-                self.cache = self.cache._replace(
-                    table=jnp.asarray(self.manager.tables))
-                self._table_dirty = False
+            self._flush_table()
             self.cache, self.state, nxt, done = self._decode(
                 self.cache, self.state, self._next_key())
             nxt_np, done_np = np.asarray(nxt), np.asarray(done)
             pos_np = np.asarray(self.cache.length[0])
             for slot in running:
                 self.scheduler.append_token(slot, nxt_np[slot])
+                self._emit(self.scheduler.slots[slot].request.uid,
+                           nxt_np[slot])
                 if done_np[slot]:
                     finished.append(self._finish(slot, int(pos_np[slot])))
+        self.step_log.append({
+            "wall_s": time.monotonic() - t0,
+            "prefill_tokens": prefill_spent,
+            "decoded": bool(running),
+        })
         return finished
 
     # -- introspection -------------------------------------------------------
@@ -428,7 +604,8 @@ class ContinuousEngine:
         live tokens — for the dense layout the two coincide (every slot
         pins a ``max_len`` lane), for the paged layout the peak tracks
         blocks actually in use, which is what a right-sized pool would
-        need."""
+        need.  Parked (LRU-retained) prefix blocks are reclaimable warm
+        capacity and excluded from the in-use numbers."""
         alloc = 2 * self.cache.k.size * self.cache.k.dtype.itemsize
         if self.manager is None:
             return {"kv_layout": "dense", "kv_allocated_bytes": alloc,
@@ -441,8 +618,46 @@ class ContinuousEngine:
                 "block_size": self.block_size, "n_blocks": self.n_blocks,
                 "peak_blocks_in_use": a.peak_in_use,
                 "blocks_in_use": a.n_in_use,
+                "blocks_retained": len(self.manager.retained),
                 "prefix_hit_tokens": self.manager.prefix_hit_tokens,
                 "decode_kernel": self.decode_kernel}
+
+    def prefill_stats(self) -> dict:
+        """Admission-path accounting: how much prompt compute actually ran
+        (vs was skipped via prefix hits) and how bursty it was per step."""
+        admitted = self._prompt_tokens_admitted
+        return {
+            "chunk_size": self.chunk_size,
+            "buckets": list(self.buckets),
+            "prefill_chunk_budget": self.prefill_chunk_budget,
+            "prompt_tokens_admitted": admitted,
+            "prefill_tokens_computed": self._prefill_tokens_computed,
+            "prefill_tokens_padded": self._prefill_tokens_padded,
+            "prefix_skipped_tokens": self._prefix_skipped_tokens,
+            "prefix_hit_rate": (self._prefix_skipped_tokens / admitted
+                                if admitted else 0.0),
+            "prefill_chunks": self._prefill_chunks,
+            "max_step_prefill_tokens": self._max_step_prefill_tokens,
+        }
+
+    def reset_stats(self) -> None:
+        """Zero the prefill/step accounting (e.g. after a compile warmup)
+        without touching the serving state.  The KV peak rebases to the
+        blocks currently in use, so ``kv_peak_resident_bytes`` reflects the
+        profiled traffic, not the warmup's high-water mark."""
+        self.step_log = deque(maxlen=65536)
+        self._prompt_tokens_admitted = 0
+        self._prefill_tokens_computed = 0
+        self._prefill_tokens_padded = 0
+        self._prefix_skipped_tokens = 0
+        self._prefill_chunks = 0
+        self._max_step_prefill_tokens = 0
+        if self.manager is not None:
+            self.manager.prefix_hit_tokens = 0
+            a = self.manager.allocator
+            a.peak_in_use = a.n_in_use
+
+    # -- drivers -------------------------------------------------------------
 
     def run(self, max_steps: Optional[int] = None) -> list:
         """Step until every submitted request has finished."""
@@ -453,6 +668,31 @@ class ContinuousEngine:
             if max_steps is not None and steps >= max_steps:
                 break
         return sorted(out, key=lambda c: c.uid)
+
+    def stream(self, max_steps: Optional[int] = None,
+               on_step: Optional[Callable[["ContinuousEngine"], None]] = None
+               ) -> Iterator[Tuple[int, int, Optional[Completion]]]:
+        """Drive the engine and yield ``(uid, token, completion)`` as
+        tokens land — ``completion`` rides with a request's LAST token (and
+        is ``None`` before that).  Submit more requests between yields, or
+        from ``on_step`` (called after EVERY engine step) — a step may
+        yield no token at all while prompts are mid-chunked-prefill, so a
+        driver feeding timed arrivals must use the hook, not the yield
+        points, or a long prefill starves the queue.  The stream drains
+        when the scheduler goes idle."""
+        steps = 0
+        while not self.scheduler.idle:
+            done = {c.uid: c for c in self.step()}
+            events = self._step_events
+            if on_step is not None:
+                on_step(self)
+            last = {uid: i for i, (uid, _) in enumerate(events)}
+            for i, (uid, tok) in enumerate(events):
+                comp = done.get(uid) if last[uid] == i else None
+                yield uid, tok, comp
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
 
 
 __all__ = ["generate", "Engine", "ContinuousEngine", "Request", "Completion",

@@ -1,0 +1,34 @@
+"""Shared token-sampling helpers for every serving path.
+
+One implementation used by one-shot ``generate``, the lock-step ``Engine``,
+and ``ContinuousEngine``'s jitted bind/decode steps, so the three engines
+cannot drift (they are asserted bit-identical by the differential tests —
+a private fork of the sampler in any one of them is how that breaks).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy_tokens(logits: jax.Array) -> jax.Array:
+    """Argmax over the vocab axis -> int32 token ids."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_tokens(logits: jax.Array, temp: jax.Array,
+                  key: jax.Array) -> jax.Array:
+    """Per-row temperature sampling: greedy rows and sampled rows coexist
+    in one batch (Gumbel-max so a single argmax serves both branches).
+
+    ``logits``: (batch, vocab); ``temp``: (batch,) float32, 0 => greedy.
+    """
+    greedy = greedy_tokens(logits)
+    g = jax.random.gumbel(key, logits.shape, jnp.float32)
+    t = jnp.maximum(temp, 1e-6)[:, None]
+    sampled = jnp.argmax(logits.astype(jnp.float32) / t + g, axis=-1)
+    return jnp.where(temp > 0, sampled, greedy).astype(jnp.int32)
+
+
+__all__ = ["greedy_tokens", "sample_tokens"]

@@ -3,12 +3,20 @@
 Pure-Python bookkeeping — no jax here.  The :class:`Scheduler` owns the
 pending FIFO queue and the per-slot lifecycle
 
-    submit -> pending -> admit(slot) -> running -> finish/evict -> slot free
+    submit -> pending -> admit(slot) -> PREFILLING -> bind -> running
+           -> finish/evict -> slot free
 
 while :class:`repro.serve.engine.ContinuousEngine` owns the device side
-(jitted prefill/decode, the batched KV cache, batched sampling params).
-Slots are recycled: the moment a request finishes, its slot is handed to
-the next pending request without touching the other in-flight rows.
+(jitted chunked prefill/decode, the batched KV cache, batched sampling
+params).  Admission no longer implies a completed prefill: a slot spends
+zero or more engine steps in the PREFILLING state while the engine feeds
+its prompt in chunks (decode lanes keep advancing in between), and
+``bind`` — called with the first sampled token once the final chunk's
+logits land — moves it to running.  Prefilling slots are occupied (not
+offered to ``next_admission``) but not decoded (absent from
+``running_slots``).  Slots are recycled: the moment a request finishes,
+its slot is handed to the next pending request without touching the
+other in-flight rows.
 """
 
 from __future__ import annotations
@@ -80,6 +88,7 @@ class Scheduler:
         self.n_slots = n_slots
         self.pending: deque = deque()
         self.slots: list = [None] * n_slots
+        self.prefilling: dict = {}  # slot -> Request (admitted, not bound)
         # bounded admission log (uids, FIFO order) for tests/introspection
         self.admitted: deque = deque(maxlen=1024)
 
@@ -99,16 +108,24 @@ class Scheduler:
         return sum(s is not None for s in self.slots)
 
     @property
+    def n_prefilling(self) -> int:
+        return len(self.prefilling)
+
+    @property
     def idle(self) -> bool:
-        return not self.pending and self.n_running == 0
+        return (not self.pending and self.n_running == 0
+                and not self.prefilling)
 
     def running_slots(self) -> list:
+        """Slots in the DECODE phase (prefilling slots are excluded — they
+        have no sampled token to advance yet)."""
         return [i for i, s in enumerate(self.slots) if s is not None]
 
     def free_slot(self) -> Optional[int]:
-        """Lowest-index free slot, or None when the batch is full."""
+        """Lowest-index free slot, or None when the batch is full.
+        Prefilling slots are occupied."""
         for i, s in enumerate(self.slots):
-            if s is None:
+            if s is None and i not in self.prefilling:
                 return i
         return None
 
@@ -129,9 +146,17 @@ class Scheduler:
 
     # -- per-slot lifecycle --------------------------------------------------
 
+    def begin_prefill(self, slot: int, request: Request) -> None:
+        """Occupy ``slot`` for a request whose prompt is being chunked in;
+        the slot joins decode only at :meth:`bind`."""
+        assert self.slots[slot] is None, f"slot {slot} busy"
+        assert slot not in self.prefilling, f"slot {slot} already prefilling"
+        self.prefilling[slot] = request
+
     def bind(self, slot: int, request: Request, first_token: int) -> None:
         """Attach an admitted request to its slot (prefill done)."""
         assert self.slots[slot] is None, f"slot {slot} busy"
+        self.prefilling.pop(slot, None)
         self.admitted.append(request.uid)
         self.slots[slot] = _Slot(request=request, tokens=[int(first_token)],
                                  first_token_at=time.monotonic())

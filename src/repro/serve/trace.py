@@ -24,13 +24,19 @@ def make_trace(n_requests: int, *, seed: int = 0, load: float = 0.25,
                min_prompt: int = 4, max_prompt: int = 64,
                min_new: int = 4, max_new: int = 32,
                temperature: float = 0.0, vocab: int = 256,
-               shared_prefix: int = 0,
+               shared_prefix: int = 0, long_frac: float = 0.0,
+               long_prompt: int = 0,
                ) -> List[Tuple[float, Request]]:
     """Sample a reproducible trace of variable-length requests.
 
     ``shared_prefix > 0`` prepends one common random prefix of that many
     tokens to every prompt — the shared-system-prompt workload the paged
-    engine's prefix cache serves from a single refcounted block set."""
+    engine's prefix cache serves from a single refcounted block set.
+
+    ``long_frac``/``long_prompt`` mix in a heavy tail: each request is,
+    with probability ``long_frac``, a ``long_prompt``-token prompt instead
+    of a ``[min_prompt, max_prompt]`` draw — the mixed long/short workload
+    where monolithic prefill stalls decode and chunked prefill must not."""
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / max(load, 1e-6), n_requests)
     arrivals = np.cumsum(gaps)
@@ -39,6 +45,8 @@ def make_trace(n_requests: int, *, seed: int = 0, load: float = 0.25,
     trace = []
     for t in arrivals:
         plen = int(rng.integers(min_prompt, max_prompt + 1))
+        if long_frac and rng.random() < long_frac:
+            plen = long_prompt
         prompt = rng.integers(0, vocab, plen).astype(np.int32)
         if prefix is not None:
             prompt = np.concatenate([prefix, prompt])
@@ -90,22 +98,52 @@ def latency_stats(completions: List[Completion], wall: float) -> dict:
     }
 
 
+def stall_stats(step_log: List[dict]) -> dict:
+    """Admission-latency profile of one replay from the engine's per-step
+    log: how long each engine step took (each step ends in at most one
+    batched decode advance, so a step's wall time IS the inter-decode-step
+    stall its prefill work causes) and how many padded prefill tokens were
+    computed inside single steps — the deterministic counterpart the
+    benchmark asserts on (wall times are recorded, not asserted)."""
+    if not step_log:
+        return {"steps": 0, "step_wall_p50_ms": 0.0, "step_wall_p95_ms": 0.0,
+                "step_wall_max_ms": 0.0, "step_prefill_tokens_p95": 0.0,
+                "step_prefill_tokens_max": 0}
+    walls = np.array([s["wall_s"] for s in step_log])
+    ptoks = np.array([s["prefill_tokens"] for s in step_log])
+    return {
+        "steps": len(step_log),
+        "step_wall_p50_ms": float(np.percentile(walls, 50) * 1e3),
+        "step_wall_p95_ms": float(np.percentile(walls, 95) * 1e3),
+        "step_wall_max_ms": float(walls.max() * 1e3),
+        "step_prefill_tokens_p95": float(np.percentile(ptoks, 95)),
+        "step_prefill_tokens_max": int(ptoks.max()),
+    }
+
+
 def bench_trace(model, cfg, trace: List[Tuple[float, Request]], *,
                 batch: int, max_len: int, max_prompt_len: int,
                 **engine_kwargs) -> Tuple[List[Completion], dict]:
     """Build a ContinuousEngine, warm the jitted prefill/decode pair, then
     replay ``trace`` — the shared body of the serve driver and benchmark.
-    Extra kwargs (``kv_layout``, ``block_size``, ``n_blocks``, ...) pass
-    through to the engine; its ``kv_stats()`` are merged into the stats."""
+    Extra kwargs (``kv_layout``, ``block_size``, ``chunk_size``, ...) pass
+    through to the engine; its ``kv_stats()``, ``prefill_stats()``, and
+    the per-step stall profile are merged into the stats."""
     from repro.serve.engine import ContinuousEngine
 
     engine = ContinuousEngine(model, cfg, batch=batch, max_len=max_len,
                               max_prompt_len=max_prompt_len, **engine_kwargs)
-    engine.submit(np.zeros(2, np.int32), max_new_tokens=2)  # compile warmup
+    # compile warmup: one prompt per reachable chunk bucket width, so the
+    # replay never pays a mid-trace jit (plus the decode/bind steps)
+    for plen in sorted({min(w, max_prompt_len) for w in engine.buckets}):
+        engine.submit(np.zeros(plen, np.int32), max_new_tokens=2)
     engine.run()
+    engine.reset_stats()  # profile the trace, not the warmup
     completions, wall = replay(engine, trace)
     stats = latency_stats(completions, wall)
     stats.update(engine.kv_stats())
+    stats.update(engine.prefill_stats())
+    stats.update(stall_stats(engine.step_log))
     return completions, stats
 
 
@@ -139,5 +177,18 @@ def format_kv_stats(label: str, stats: dict) -> str:
             f"{stats['kv_allocated_bytes'] / 1024:8.1f} KiB{extra}")
 
 
-__all__ = ["make_trace", "replay", "latency_stats", "format_stats",
-           "format_kv_stats", "bench_trace", "greedy_agreement"]
+def format_prefill_stats(label: str, stats: dict) -> str:
+    """One-line render of the admission-path profile (merged
+    ``prefill_stats()`` + ``stall_stats``)."""
+    return (f"{label:11s}: prefill {stats['prefill_tokens_computed']}"
+            f"/{stats['prompt_tokens_admitted']} tok computed "
+            f"({stats['prefix_hit_rate']:.0%} prefix-skip)   "
+            f"chunks {stats['prefill_chunks']} "
+            f"@<= {stats['max_step_prefill_tokens']} tok/step   "
+            f"step p95 {stats['step_wall_p95_ms']:6.2f} ms "
+            f"max {stats['step_wall_max_ms']:6.2f} ms")
+
+
+__all__ = ["make_trace", "replay", "latency_stats", "stall_stats",
+           "format_stats", "format_kv_stats", "format_prefill_stats",
+           "bench_trace", "greedy_agreement"]

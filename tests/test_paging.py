@@ -79,12 +79,15 @@ def test_differential_trace_three_way(setup):
         assert len(c.tokens) == n
         assert c.latency >= c.ttft >= 0
     # the shared 6-token prefix spans one full 4-token block; overlapping
-    # requests hit it (entries evict whenever the pool fully drains between
-    # staggered arrivals, so not every request can hit)
+    # requests hit it — and with LRU retention the hit survives pool drains
+    # between staggered arrivals, so every request after the first hits
     assert eng.manager.prefix_hit_tokens >= 4
-    # drained engine returns every block to the pool, prefix cache empty
+    # drained engine holds no live references; what survives is the warm
+    # LRU of parked prefix blocks, each still indexed by the prefix cache
     assert eng.manager.fully_free
-    assert len(eng.manager.prefix) == 0
+    assert len(eng.manager.prefix) == len(eng.manager.retained)
+    assert (eng.manager.allocator.n_free
+            + eng.manager.allocator.n_parked) == eng.n_blocks
 
 
 def test_paged_matches_dense_layout(setup):
@@ -274,15 +277,18 @@ def test_allocator_random_ops_never_leak_or_double_free(seed):
 
 @given(st.integers(0, 2**32 - 1))
 def test_manager_prefix_hits_never_alias_writable_blocks(seed):
-    """Random admit/release sequences with colliding prompt stems: the
-    blocks a new admission may WRITE (its scatter destinations) are always
-    exclusively owned (refcount 1, no other slot maps them), shared prefix
-    blocks are only ever read, and draining every slot returns the pool to
-    fully free with an empty prefix cache."""
+    """Random admit/publish/release sequences with colliding prompt stems
+    (LRU retention on for half the seeds): the blocks a new admission may
+    WRITE (its scatter destinations) are always exclusively owned
+    (refcount 1, no other slot maps them), shared prefix blocks are only
+    ever read, parked blocks never hold a reference, and draining every
+    slot leaves no live references — just the warm LRU, fully indexed by
+    the prefix cache."""
     rng = np.random.default_rng(seed)
     bs, batch, max_len = 4, 4, 32
+    retain = int(rng.integers(0, 9)) if seed % 2 else 0
     mgr = PagedCacheManager(n_blocks=24, block_size=bs, batch=batch,
-                            max_len=max_len)
+                            max_len=max_len, retain_blocks=retain)
     stems = [rng.integers(0, 256, 8).astype(np.int32) for _ in range(2)]
     owned = {}  # slot -> set of mapped block ids
     for _ in range(60):
@@ -297,15 +303,23 @@ def test_manager_prefix_hits_never_alias_writable_blocks(seed):
             total = min(len(prompt) + int(rng.integers(1, 6)), max_len)
             if not mgr.can_admit(prompt, total):
                 continue
-            cached, dst = mgr.admit(slot, prompt, total, max_prompt_len=16)
+            cached, hits = mgr.admit(slot, prompt, total)
             assert cached % bs == 0 and cached <= len(prompt)
+            assert len(hits) * bs == cached
+            dst = mgr.scatter_rows(slot, 0, len(prompt), lo=cached,
+                                   hi=len(prompt))
             mapped = dst[dst < mgr.sentinel * bs]
             writable = {int(b) for b in mapped // bs}
+            assert not writable & set(hits)  # hit blocks are read-only
             for other, blocks in owned.items():
                 assert not writable & blocks, \
                     f"slot {slot} would write blocks mapped by slot {other}"
             for bid in writable:
                 assert mgr.allocator.refcount[bid] == 1
+            # the writer sometimes finishes its prefill (publishing its
+            # registered full blocks), sometimes releases mid-pending
+            if rng.random() < 0.7:
+                mgr.publish(slot, len(prompt))
             owned[slot] = {int(b) for b in mgr.tables[slot]
                            if b != mgr.sentinel}
         elif owned:
@@ -314,7 +328,12 @@ def test_manager_prefix_hits_never_alias_writable_blocks(seed):
             del owned[slot]
         in_use = {b for blocks in owned.values() for b in blocks}
         assert mgr.allocator.n_in_use == len(in_use)
+        assert len(mgr.retained) <= retain
+        for bid in mgr.retained:
+            assert mgr.allocator.refcount[bid] == 0
+            assert bid not in in_use
     for slot in sorted(owned):
         mgr.release(slot)
     assert mgr.fully_free
-    assert len(mgr.prefix) == 0
+    assert len(mgr.prefix) == len(mgr.retained)
+    assert mgr.allocator.n_free + mgr.allocator.n_parked == 24

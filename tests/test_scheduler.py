@@ -71,6 +71,31 @@ def test_scheduler_slot_accounting():
     assert comp.tokens == [3, 5] and sched.idle
 
 
+def test_prefill_lifecycle_occupies_slot_without_decoding():
+    """A slot in the PREFILLING state is occupied (not offered to new
+    admissions) but absent from the decode batch until bind."""
+    sched = Scheduler(2)
+    reqs = [Request(prompt=np.array([1]), max_new_tokens=2)
+            for _ in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    s0, r0 = sched.next_admission()
+    sched.begin_prefill(s0, r0)
+    assert sched.n_prefilling == 1 and not sched.idle
+    assert sched.running_slots() == []         # nothing decodes yet
+    assert sched.free_slot() == 1              # slot 0 is taken
+    s1, r1 = sched.next_admission()
+    assert s1 == 1
+    sched.begin_prefill(s1, r1)
+    assert sched.next_admission() is None      # batch full mid-prefill
+    sched.bind(s0, r0, first_token=9)
+    assert sched.n_prefilling == 1 and sched.running_slots() == [0]
+    comp = sched.finish(s0, "length")
+    assert comp.tokens == [9]
+    s2, r2 = sched.next_admission()            # recycled slot, FIFO order
+    assert s2 == 0 and r2.uid == reqs[2].uid
+
+
 def test_request_validation():
     with pytest.raises(ValueError):
         Request(prompt=np.array([], np.int32), max_new_tokens=1)

@@ -133,6 +133,36 @@ def test_trace_shared_prefix():
         np.testing.assert_array_equal(r.prompt[:8], first)
 
 
+def test_stream_yields_every_token_in_order(key):
+    """The streaming API must yield exactly the tokens each completion
+    reports, in generation order, attaching the Completion to the last
+    token — and the push callback must see the same sequence."""
+    from repro.serve import ContinuousEngine
+
+    cfg = get_config("paper-tiny").reduced()
+    model = build_model(key, cfg)
+    eng = ContinuousEngine(model, cfg, batch=2, max_len=32, max_prompt_len=8)
+    pushed = []
+    eng.on_token = lambda uid, tok: pushed.append((uid, tok))
+    rng = np.random.default_rng(1)
+    uids = [eng.submit(rng.integers(0, cfg.vocab, n).astype(np.int32),
+                       max_new_tokens=m)
+            for n, m in [(5, 4), (3, 6), (7, 3)]]
+    seen: dict = {u: [] for u in uids}
+    comps: dict = {}
+    for uid, tok, comp in eng.stream():
+        seen[uid].append(tok)
+        if comp is not None:
+            assert comp.uid == uid
+            comps[uid] = comp
+    assert sorted(comps) == sorted(uids)  # every request completed
+    for uid, comp in comps.items():
+        assert seen[uid] == comp.tokens         # streamed == collected
+        assert seen[uid][-1] == comp.tokens[-1]  # done rode the last token
+    assert sorted(pushed) == sorted(
+        (u, t) for u, toks in seen.items() for t in toks)
+
+
 def test_paged_kv_resident_bytes_below_dense_allocation(key):
     """The point of paging: on a mixed-length trace the peak HBM-resident
     KV bytes of the paged layout stay well under the dense layout's

@@ -10,6 +10,13 @@ serving side) over the paged KV cache with chunked, prefix-aware prefill.
     PYTHONPATH=src python examples/serve_lm.py --reduced --batch 4 \
         --n-requests 8 --stream
 
+    # heterogeneous families: hymba (ring-buffer KV + SSM state) and
+    # mamba2 (pure SSM) serve through the same engine via per-slot state
+    PYTHONPATH=src python examples/serve_lm.py --reduced --batch 4 \
+        --n-requests 8 --arch hymba-1.5b --chunk-size 8
+    PYTHONPATH=src python examples/serve_lm.py --reduced --batch 4 \
+        --n-requests 8 --arch mamba2-2.7b
+
 Wraps the production serve driver (``repro.launch.serve``), so every
 engine knob threads straight through: ``--kv-layout`` / ``--block-size`` /
 ``--n-blocks`` pick the KV layout, ``--decode-kernel`` picks the paged
@@ -34,7 +41,10 @@ freed prefix blocks stay parked on an LRU so hits survive idle periods.
 
 Greedy outputs are bit-identical to the dense per-slot layout, to the
 monolithic (single-chunk) prefill, and to the one-shot ``generate``
-baseline — enforced by ``tests/test_chunked_prefill.py``.
+baseline — enforced by ``tests/test_chunked_prefill.py`` (and by
+``tests/test_hetero_serving.py`` for the hymba/mamba per-slot state
+kinds, where the paged knobs degrade gracefully: ring lanes and SSM
+state cannot be paged or prefix-cached).
 
 Prints tokens/s, p50/p95 per-request latency, TTFT, HBM-resident KV
 bytes, the admission-path profile (tokens computed vs skipped, per-step

@@ -33,6 +33,15 @@ common N-token system prefix to exercise the prefix cache;
 ``--long-frac/--long-prompt`` mix in a heavy prompt tail to exercise
 chunking.
 
+**Heterogeneous families.**  ``--arch hymba-1.5b`` (hybrid sliding-window
+attention + SSM) and ``--arch mamba2-2.7b`` (pure SSM) serve through the
+same engine via per-slot state — ring-buffer KV lanes (O(window) per
+slot) and/or conv/ssm recurrent state (O(1) per slot).  These state
+kinds cannot be paged or prefix-cached, so the engine degrades the paged
+knobs gracefully (prefix reuse auto-off, block reservation skipped) and
+reports the effective ``cache_kind`` in its stats; ``--decode-kernel
+pallas`` is attention-paged-only and errors for them.
+
 ``--stream`` switches from batch replay to the streaming API: tokens are
 printed as SSE-style ``data:`` lines the moment they land
 (``ContinuousEngine.stream()`` / ``on_token``).
@@ -165,6 +174,13 @@ def main(argv=None) -> int:
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(jax.random.PRNGKey(0), cfg)
+    kind = getattr(model, "cache_kind", lambda c: None)(cfg)
+    if kind not in (None, "kv"):
+        if args.decode_kernel == "pallas":
+            p.error(f"--decode-kernel pallas needs paged attention KV; "
+                    f"{args.arch} serves via per-slot {kind!r} state")
+        print(f"# {args.arch}: per-slot {kind!r} state — paged layout / "
+              "prefix cache knobs inactive")
     trace = make_trace(args.n_requests, seed=args.seed, load=args.load,
                        min_prompt=min_prompt,
                        max_prompt=args.max_prompt_len - args.shared_prefix,

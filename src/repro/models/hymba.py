@@ -11,7 +11,7 @@ from repro.configs.base import ArchConfig
 from repro.dist.sharding import constrain_acts
 from repro.nn.attention import KVCache
 from repro.nn.embedding import Embedding
-from repro.nn.hybrid import HybridMixer, HybridState
+from repro.nn.hybrid import HybridCache, HybridMixer, HybridState
 from repro.nn.linear import Linear
 from repro.nn.mlp import SwiGLU
 from repro.nn.module import Module, static_field
@@ -52,6 +52,12 @@ class HymbaBlock(Module):
 
     def decode(self, x, state: HybridState):
         m, state = self.mixer.decode(self.mixer_norm(x), state)
+        x = x + m
+        x = x + self.mlp(self.mlp_norm(x))
+        return x, state
+
+    def prefill_chunk(self, x, state: HybridState, **kw):
+        m, state = self.mixer.prefill_chunk(self.mixer_norm(x), state, **kw)
         x = x + m
         x = x + self.mlp(self.mlp_norm(x))
         return x, state
@@ -97,8 +103,15 @@ class HymbaLM(Module):
                                    self.blocks)
         return self._head(self.final_norm(x)), aux
 
+    def cache_kind(self, cfg: ArchConfig) -> str:
+        """Capability probe for ``repro.serve.ContinuousEngine``: hybrid
+        per-slot state — ring-buffer KV lanes (O(window) per slot) for
+        the sliding-window attention path plus O(1) conv/ssm state for
+        the SSM path.  Ring lanes cannot be paged or prefix-cached."""
+        return "hybrid"
+
     def init_cache(self, batch: int, max_len: int, cfg: ArchConfig,
-                   dtype=jnp.bfloat16) -> HybridState:
+                   dtype=jnp.bfloat16, per_slot: bool = False):
         L = self.n_layers
         slots = min(max_len, cfg.window) if cfg.window else max_len
         kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
@@ -106,6 +119,14 @@ class HymbaLM(Module):
         n_heads_ssm = d_inner // cfg.ssm_head_dim
         conv_dim = d_inner + 2 * cfg.ssm_state  # n_groups = 1
         from repro.nn.ssm import SSMState
+        if per_slot:
+            return HybridCache(
+                k=jnp.zeros((L, batch, slots, kvh, hd), dtype),
+                v=jnp.zeros((L, batch, slots, kvh, hd), dtype),
+                conv=jnp.zeros((L, batch, 3, conv_dim), dtype),
+                ssm=jnp.zeros((L, batch, n_heads_ssm, cfg.ssm_head_dim,
+                               cfg.ssm_state), dtype),
+                length=jnp.zeros((L, batch), jnp.int32))
         return HybridState(
             kv=KVCache(
                 k=jnp.zeros((L, batch, slots, kvh, hd), dtype),
@@ -131,8 +152,51 @@ class HymbaLM(Module):
         x, new_cache = jax.lax.scan(body, x, (self.blocks, cache))
         return self._head(self.final_norm(x[:, -1:])), new_cache
 
-    def decode(self, token, cache: HybridState):
+    def prefill_chunk(self, tokens, cache: HybridCache, *, slot, offset,
+                      n_valid, need_logits: bool = True):
+        """Consume one bucket-padded prompt chunk for slot ``slot`` of the
+        per-slot serving cache: the attention path writes the slot's ring
+        (or dense) KV lane, the SSM path scans into the slot's carried
+        conv/ssm state (see :meth:`TransformerLM.prefill_chunk` for the
+        engine-side contract)."""
+        x = constrain_acts(self.embed(tokens))
+        from repro.nn.ssm import SSMState
+
+        def body(x, xs):
+            blk, (k, v, cv, sm, ln) = xs
+            st = HybridState(kv=KVCache(k, v, ln), ssm=SSMState(cv, sm))
+            y, st2 = blk.prefill_chunk(x, st, slot=slot, offset=offset,
+                                       n_valid=n_valid)
+            return constrain_acts(y), (st2.kv.k, st2.kv.v, st2.ssm.conv,
+                                       st2.ssm.ssm, st2.kv.length)
+
+        x, (k, v, cv, sm, ln) = jax.lax.scan(
+            body, x, (self.blocks, (cache.k, cache.v, cache.conv,
+                                    cache.ssm, cache.length)))
+        new_cache = HybridCache(k, v, cv, sm, ln)
+        if not need_logits:
+            return None, new_cache
+        last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+        return self._head(self.final_norm(last))[:, 0], new_cache
+
+    def decode(self, token, cache):
         x = self.embed(token)
+
+        if isinstance(cache, HybridCache):
+            from repro.nn.ssm import SSMState
+
+            def body(x, xs):
+                blk, (k, v, cv, sm, ln) = xs
+                st = HybridState(kv=KVCache(k, v, ln), ssm=SSMState(cv, sm))
+                y, st2 = blk.decode(x, st)
+                return y, (st2.kv.k, st2.kv.v, st2.ssm.conv, st2.ssm.ssm,
+                           st2.kv.length)
+
+            x, (k, v, cv, sm, ln) = jax.lax.scan(
+                body, x, (self.blocks, (cache.k, cache.v, cache.conv,
+                                        cache.ssm, cache.length)))
+            return self._head(self.final_norm(x)), HybridCache(k, v, cv, sm,
+                                                               ln)
 
         def body(x, xs):
             blk, c = xs

@@ -175,6 +175,14 @@ class TransformerLM(Module):
 
     # -- serving --------------------------------------------------------------
 
+    def cache_kind(self, cfg: ArchConfig) -> str:
+        """Capability probe for ``repro.serve.ContinuousEngine``: which
+        per-slot state family this model serves with.  Global-attention
+        configs are ``"kv"`` (paged or dense per-slot lanes); sliding-
+        window configs are ``"ring"`` (per-slot ring lanes — O(window)
+        decode memory, cannot be paged or prefix-cached)."""
+        return "ring" if cfg.window else "kv"
+
     def init_cache(self, batch: int, max_len: int, cfg: ArchConfig,
                    dtype=jnp.bfloat16, per_slot: bool = False) -> KVCache:
         """``per_slot=True`` gives each batch row its own length counter

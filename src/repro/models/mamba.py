@@ -13,7 +13,7 @@ from repro.nn.embedding import Embedding
 from repro.nn.linear import Linear
 from repro.nn.module import Module, static_field
 from repro.nn.norm import RMSNorm
-from repro.nn.ssm import Mamba2Mixer, SSMState
+from repro.nn.ssm import Mamba2Mixer, SSMCache, SSMState
 
 
 class MambaBlock(Module):
@@ -50,6 +50,20 @@ class MambaBlock(Module):
     def decode(self, x, state: SSMState):
         y, state = self.mixer.decode(self.norm(x), state)
         return x + y, state
+
+    def prefill_chunk(self, x, conv, ssm, *, slot, offset, n_valid):
+        """One prompt chunk for slot ``slot`` of the batched serving
+        state (``conv``: (B, cw-1, c); ``ssm``: (B, h, p, n)).  The first
+        chunk of a request (``offset == 0``) zeros the slot's lanes
+        in-graph — the per-slot reset that makes slot recycling safe."""
+        fresh = offset == 0
+        conv0 = jnp.where(fresh, 0.0, conv[slot][None])
+        ssm0 = jnp.where(fresh, 0.0, ssm[slot][None])
+        y, st = self.mixer.prefill_chunk(self.norm(x), SSMState(conv0, ssm0),
+                                         n_valid=n_valid)
+        new_conv = conv.at[slot].set(st.conv[0].astype(conv.dtype))
+        new_ssm = ssm.at[slot].set(st.ssm[0].astype(ssm.dtype))
+        return x + y, new_conv, new_ssm
 
 
 class MambaLM(Module):
@@ -92,14 +106,26 @@ class MambaLM(Module):
                                    self.blocks)
         return self._head(self.final_norm(x)), aux
 
+    def cache_kind(self, cfg: ArchConfig) -> str:
+        """Capability probe for ``repro.serve.ContinuousEngine``: pure-SSM
+        per-slot state (O(1) decode memory per slot; no paged / prefix
+        machinery applies — there is nothing position-addressable to
+        page or share)."""
+        return "ssm"
+
     def init_cache(self, batch: int, max_len: int, cfg: ArchConfig,
-                   dtype=jnp.bfloat16) -> SSMState:
+                   dtype=jnp.bfloat16, per_slot: bool = False):
         del max_len  # O(1) state — the whole point
         mixer = Mamba2Mixer.create(  # shape-only template
             jax.random.PRNGKey(0), cfg.d_model, expand=cfg.ssm_expand,
             head_dim=cfg.ssm_head_dim, d_state=cfg.ssm_state, dtype=dtype)
         s = mixer.init_state(batch, dtype=dtype)
         L = self.n_layers
+        if per_slot:
+            return SSMCache(
+                conv=jnp.zeros((L, *s.conv.shape), dtype),
+                ssm=jnp.zeros((L, *s.ssm.shape), dtype),
+                length=jnp.zeros((L, batch), jnp.int32))
         return SSMState(
             conv=jnp.zeros((L, *s.conv.shape), dtype),
             ssm=jnp.zeros((L, *s.ssm.shape), dtype))
@@ -118,8 +144,43 @@ class MambaLM(Module):
         x, new_cache = jax.lax.scan(body, x, (self.blocks, cache))
         return self._head(self.final_norm(x[:, -1:])), new_cache
 
-    def decode(self, token, cache: SSMState):
+    def prefill_chunk(self, tokens, cache: SSMCache, *, slot, offset,
+                      n_valid, need_logits: bool = True):
+        """Consume one bucket-padded prompt chunk for slot ``slot`` of the
+        per-slot serving cache (see :meth:`TransformerLM.prefill_chunk`
+        for the contract; here the carried state is the slot's conv/ssm
+        lanes instead of KV rows, and ``offset`` only advances the
+        position counter — the recurrence itself is position-free)."""
+        x = constrain_acts(self.embed(tokens))
+
+        def body(x, xs):
+            blk, (cv, sm) = xs
+            y, cv2, sm2 = blk.prefill_chunk(x, cv, sm, slot=slot,
+                                            offset=offset, n_valid=n_valid)
+            return constrain_acts(y), (cv2, sm2)
+
+        x, (cv, sm) = jax.lax.scan(body, x, (self.blocks,
+                                             (cache.conv, cache.ssm)))
+        length = cache.length.at[:, slot].set(offset + n_valid)
+        new_cache = SSMCache(cv, sm, length)
+        if not need_logits:
+            return None, new_cache
+        last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+        return self._head(self.final_norm(last))[:, 0], new_cache
+
+    def decode(self, token, cache):
         x = self.embed(token)
+
+        if isinstance(cache, SSMCache):
+            def body(x, xs):
+                blk, (cv, sm) = xs
+                y, st = blk.decode(x, SSMState(cv, sm))
+                return y, (st.conv, st.ssm)
+
+            x, (cv, sm) = jax.lax.scan(body, x, (self.blocks,
+                                                 (cache.conv, cache.ssm)))
+            return self._head(self.final_norm(x)), SSMCache(
+                cv, sm, cache.length + 1)
 
         def body(x, xs):
             blk, c = xs

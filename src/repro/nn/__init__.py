@@ -9,8 +9,8 @@ from repro.nn.attention import (Attention, KVCache, PagedKVCache,
                                 UnsupportedCacheError)
 from repro.nn.mlp import SwiGLU, GeluMLP
 from repro.nn.moe import MoE, MoEOutput
-from repro.nn.ssm import Mamba2Mixer, SSMState
-from repro.nn.hybrid import HybridMixer, HybridState
+from repro.nn.ssm import Mamba2Mixer, SSMCache, SSMState
+from repro.nn.hybrid import HybridCache, HybridMixer, HybridState
 
 __all__ = [
     "Module", "static_field", "iter_modules", "map_modules",
@@ -19,5 +19,6 @@ __all__ = [
     "RMSNorm", "LayerNorm", "Embedding", "apply_rope",
     "Attention", "KVCache", "PagedKVCache", "UnsupportedCacheError",
     "SwiGLU", "GeluMLP", "MoE", "MoEOutput",
-    "Mamba2Mixer", "SSMState", "HybridMixer", "HybridState",
+    "Mamba2Mixer", "SSMCache", "SSMState",
+    "HybridCache", "HybridMixer", "HybridState",
 ]

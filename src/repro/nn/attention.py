@@ -293,6 +293,19 @@ class Attention(Module):
         routed out of range and dropped), and attention gathers the full
         lane under a ``kpos <= qpos`` mask.
 
+        Ring-buffer :class:`KVCache` (sliding-window layer whose lane
+        holds exactly ``window`` slots): the chunk attends against the
+        concatenation of the slot's resident ring lanes and its own fresh
+        K/V — ring lane ``i`` holds absolute position ``offset - 1 -
+        ((offset - 1 - i) mod window)`` (the newest position below
+        ``offset`` on that lane; negative means this request never wrote
+        it, which also masks out stale lanes from a recycled slot without
+        any reset), and both halves carry offset-relative causal +
+        sliding-window masks, so any chunking is wraparound-safe.  Only
+        the newest ``min(n_valid, window)`` chunk rows are scattered back
+        (``slot(p) = p % window``); older rows of an over-wide chunk and
+        padding rows route to the out-of-range lane and drop.
+
         :class:`PagedKVCache`: ``dst`` gives the flat pool row for each of
         the W chunk positions — the engine points padding AND cached-prefix
         positions at the out-of-range sentinel row, so ``mode='drop'``
@@ -303,15 +316,15 @@ class Attention(Module):
         Returns ``(chunk outputs (1, W, dim), updated cache)`` with the
         slot's length advanced to ``offset + n_valid``.
         """
-        if self.window > 0:
-            raise NotImplementedError(
-                "chunked prefill supports global attention only; "
-                "sliding-window layers use the ring-buffer KVCache path")
         w = x.shape[1]
         qpos = offset + jnp.arange(w)  # (W,) absolute positions
         q, k, v = self._qkv(x, positions=qpos[None, :],
                             kv_positions=qpos[None, :])
         if isinstance(cache, PagedKVCache):
+            if self.window > 0:
+                raise NotImplementedError(
+                    "paged chunked prefill supports global attention only; "
+                    "sliding-window layers use the ring-buffer KVCache path")
             nb, bs, kvh, hd = cache.k.shape
             max_table = cache.table.shape[1]
             pool_k = cache.k.reshape(nb * bs, kvh, hd)
@@ -330,10 +343,40 @@ class Attention(Module):
             new_cache = PagedKVCache(pool_k.reshape(cache.k.shape),
                                      pool_v.reshape(cache.v.shape),
                                      cache.table, length)
+        elif self._is_ring(cache):
+            ring = self.window
+            i = jnp.arange(ring)
+            # lane i holds the newest absolute position < offset congruent
+            # to i mod ring; negative => never written by THIS request
+            # (covers both a cold lane and stale bytes left by the slot's
+            # previous occupant — no reset pass needed)
+            p_lane = (offset - 1) - jnp.mod((offset - 1) - i, ring)
+            ring_k = cache.k[slot][None].astype(x.dtype)  # (1, ring, kvh, hd)
+            ring_v = cache.v[slot][None].astype(x.dtype)
+            ring_valid = ((p_lane[None, :] >= 0)
+                          & (p_lane[None, :] > qpos[:, None] - ring))
+            j = jnp.arange(w)
+            self_valid = ((j[None, :] <= j[:, None])         # causal in-chunk
+                          & (j[None, :] < n_valid)           # padding
+                          & (qpos[None, :] > qpos[:, None] - ring))
+            mask = jnp.concatenate([ring_valid, self_valid], axis=1)
+            gk = jnp.concatenate([ring_k, k.astype(x.dtype)], axis=1)
+            gv = jnp.concatenate([ring_v, v.astype(x.dtype)], axis=1)
+            out = self._attend(q, gk, gv, mask[None, None])
+            # scatter the newest min(n_valid, ring) rows to slot(p) = p %
+            # ring; rows a wider-than-window chunk already superseded and
+            # padding rows route to the out-of-range lane and drop (the
+            # survivors hit pairwise-distinct lanes: ring consecutive
+            # positions)
+            live = (j < n_valid) & (j >= n_valid - ring)
+            lanes = jnp.where(live, (offset + j) % ring, ring)
+            new_k = cache.k.at[slot, lanes].set(k[0].astype(cache.k.dtype),
+                                                mode="drop")
+            new_v = cache.v.at[slot, lanes].set(v[0].astype(cache.v.dtype),
+                                                mode="drop")
+            length = cache.length.at[slot].set(offset + n_valid)
+            new_cache = KVCache(new_k, new_v, length)
         else:
-            if self._is_ring(cache):
-                raise NotImplementedError(
-                    "chunked prefill has no ring-buffer path")
             max_len = cache.k.shape[1]
             wpos = jnp.where(jnp.arange(w) < n_valid, qpos, max_len)
             new_k = cache.k.at[slot, wpos].set(k[0].astype(cache.k.dtype),

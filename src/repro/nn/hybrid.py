@@ -28,6 +28,24 @@ class HybridState(NamedTuple):
     ssm: SSMState
 
 
+class HybridCache(NamedTuple):
+    """Per-slot serving state for continuous batching: the attention
+    path's ring-buffer (or dense) KV lanes plus the SSM path's conv/ssm
+    state, layer-stacked, sharing one per-slot position counter.
+
+    When the config uses sliding-window attention, ``k``/``v`` hold
+    exactly ``window`` slots per lane (``slot(p) = p % window`` — decode
+    memory O(window) per slot regardless of context length); otherwise a
+    dense ``max_len`` lane.  ``length`` drives both the ring write lane
+    and the SSM bookkeeping."""
+
+    k: jax.Array  # (n_layers, batch, slots, kv_heads, head_dim)
+    v: jax.Array  # (n_layers, batch, slots, kv_heads, head_dim)
+    conv: jax.Array  # (n_layers, batch, conv_width - 1, conv_dim)
+    ssm: jax.Array  # (n_layers, batch, heads, head_dim, state)
+    length: jax.Array  # (n_layers, batch) int32 — absolute position
+
+
 class HybridMixer(Module):
     attn: Attention
     ssm: Mamba2Mixer
@@ -65,10 +83,38 @@ class HybridMixer(Module):
         y = y.reshape(x.shape[0], x.shape[1], self.ssm.d_inner)
         y = self.ssm.gate_norm(y) * jax.nn.silu(z)
         s = self.ssm.out_proj(y)
-        conv_tail = xbc[:, -(self.ssm.conv_width - 1):, :]
+        w = self.ssm.conv_width - 1
+        conv_tail = xbc[:, -w:, :] if x.shape[1] >= w else jnp.pad(
+            xbc, ((0, 0), (w - x.shape[1], 0), (0, 0)))
         new_state = HybridState(
             kv=kv, ssm=SSMState(conv=conv_tail, ssm=ssm_final))
         return 0.5 * (self.attn_norm(a) + self.ssm_norm(s)), new_state
+
+    def prefill_chunk(self, x: jax.Array, state: HybridState, *,
+                      slot: jax.Array, offset: jax.Array,
+                      n_valid: jax.Array):
+        """Consume one prompt chunk for ONE slot of a batched serving
+        state: the attention path scatters into the slot's (ring or
+        dense) KV lane via :meth:`Attention.prefill_chunk`, the SSM path
+        scans the chunk into the slot's carried conv/ssm state.  The
+        first chunk of a request (``offset == 0``) zeros the slot's SSM
+        lanes in-graph — the per-slot state reset that makes slot
+        recycling safe (the KV ring needs no reset: its masks exclude
+        lanes this request never wrote)."""
+        a, kv = self.attn.prefill_chunk(x, state.kv, slot=slot,
+                                        offset=offset, n_valid=n_valid)
+        fresh = offset == 0
+        conv0 = jnp.where(fresh, 0.0, state.ssm.conv[slot][None])
+        ssm0 = jnp.where(fresh, 0.0, state.ssm.ssm[slot][None])
+        s, st = self.ssm.prefill_chunk(x, SSMState(conv0, ssm0),
+                                       n_valid=n_valid)
+        new_ssm = SSMState(
+            conv=state.ssm.conv.at[slot].set(
+                st.conv[0].astype(state.ssm.conv.dtype)),
+            ssm=state.ssm.ssm.at[slot].set(
+                st.ssm[0].astype(state.ssm.ssm.dtype)))
+        out = 0.5 * (self.attn_norm(a) + self.ssm_norm(s))
+        return out, HybridState(kv=kv, ssm=new_ssm)
 
     def decode(self, x: jax.Array, state: HybridState):
         a, kv = self.attn.decode(x, state.kv)

@@ -32,6 +32,22 @@ class SSMState(NamedTuple):
     ssm: jax.Array  # (batch, heads, head_dim, state) recurrent state
 
 
+class SSMCache(NamedTuple):
+    """Per-slot serving state for continuous batching (``repro.serve``).
+
+    The same rolling conv buffer + recurrent state as :class:`SSMState`,
+    layer-stacked and carrying an explicit per-slot position counter so
+    the engine can drive slots at independent positions (the counter is
+    bookkeeping only — the recurrence itself is position-free, which is
+    why decode memory is O(1) per slot).  Slot recycling needs no reset
+    pass: the first prefill chunk of a new request (``offset == 0``)
+    zeros the slot's conv/ssm lanes in-graph before scanning in."""
+
+    conv: jax.Array  # (n_layers, batch, conv_width - 1, conv_dim)
+    ssm: jax.Array  # (n_layers, batch, heads, head_dim, state)
+    length: jax.Array  # (n_layers, batch) int32 — absolute position
+
+
 def _segsum(a: jax.Array) -> jax.Array:
     """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} a[..., k] (−inf j>i)."""
     q = a.shape[-1]
@@ -110,8 +126,12 @@ class Mamba2Mixer(Module):
 
     # -- chunked SSD (training / prefill) ------------------------------------
 
-    def _ssd(self, x, dt, B, C):
+    def _ssd(self, x, dt, B, C, initial_state=None):
         """Chunked SSD. x: (b,l,h,p); dt: (b,l,h); B/C: (b,l,g,n).
+
+        ``initial_state`` (b,h,p,n) seeds the inter-chunk recurrence —
+        the chunked scan-in path for serving feeds a prompt span at a
+        time, carrying the state between spans.
 
         Returns y: (b,l,h,p) and the final state (b,h,p,n).
         """
@@ -166,7 +186,8 @@ class Mamba2Mixer(Module):
             s_new = s_prev * jnp.exp(atot)[:, :, None, None].astype(s_prev.dtype) + s_c
             return s_new, s_prev  # emit state *entering* the chunk
 
-        s0 = jnp.zeros((b, h, p, n), x.dtype)
+        s0 = (jnp.zeros((b, h, p, n), x.dtype) if initial_state is None
+              else initial_state.astype(x.dtype))
         final, s_in = jax.lax.scan(
             step, s0, (states.transpose(1, 0, 2, 3, 4), a_tot.transpose(1, 0, 2)))
         s_in = s_in.transpose(1, 0, 2, 3, 4)  # (b,nc,h,p,n)
@@ -204,6 +225,40 @@ class Mamba2Mixer(Module):
             ssm=jnp.zeros((batch, self.n_heads, self.head_dim, self.d_state),
                           dtype),
         )
+
+    def prefill_chunk(self, u: jax.Array, state: SSMState, *,
+                      n_valid: jax.Array):
+        """Scan one padded prompt chunk into a carried state.
+
+        ``u``: (1, W, dim) — the first ``n_valid`` rows are real tokens,
+        the rest right-padding.  The depthwise conv reads its left context
+        from ``state.conv`` (instead of zero padding), padding rows are
+        routed to exact no-ops before the SSD scan (``x = 0`` and raw
+        ``dt = -30`` => softplus ≈ 1e-13 => decay rounds to exactly 1.0 in
+        fp32, so the carried state is unaffected bit-for-bit), and the new
+        conv tail is sliced at the REAL frontier ``n_valid`` — feeding a
+        prompt in any chunking yields the same carried state as one
+        monolithic prefill up to fp summation order.
+
+        Returns ``(chunk outputs (1, W, dim), updated SSMState)``."""
+        b, W, _ = u.shape
+        z, xbc, dt = self._split(self.in_proj(u))
+        buf = jnp.concatenate([state.conv.astype(xbc.dtype), xbc], axis=1)
+        w = self.conv_w.astype(xbc.dtype)
+        conv = sum(buf[:, i:i + W, :] * w[i] for i in range(self.conv_width))
+        xbc_c = jax.nn.silu(conv + self.conv_b.astype(xbc.dtype))
+        x, B, C = self._split_xbc(xbc_c)
+        live = jnp.arange(W) < n_valid
+        x = jnp.where(live[None, :, None, None], x, 0.0)
+        dt = jnp.where(live[None, :, None], dt, -30.0)
+        y, final = self._ssd(x, dt, B, C, initial_state=state.ssm)
+        y = y.reshape(b, W, self.d_inner)
+        y = self.gate_norm(y) * jax.nn.silu(z)
+        tail = jax.lax.dynamic_slice_in_dim(buf, n_valid,
+                                            self.conv_width - 1, axis=1)
+        new_state = SSMState(conv=tail.astype(state.conv.dtype),
+                             ssm=final.astype(state.ssm.dtype))
+        return self.out_proj(y), new_state
 
     def decode(self, u: jax.Array, state: SSMState):
         """One-token recurrent step. u: (b, 1, dim)."""

@@ -6,8 +6,14 @@ Five modules:
 
 * ``repro.serve.engine`` — device execution.  ``generate`` (one-shot
   prefill + scan decode, the equivalence baseline), ``Engine`` (lock-step
-  fixed batch, kept for SSM/encdec caches), and ``ContinuousEngine``: a
-  fixed slot batch where requests join and leave mid-flight.  Prompts
+  fixed batch, kept for encdec caches and as a baseline), and
+  ``ContinuousEngine``: a fixed slot batch where requests join and leave
+  mid-flight.  The model's ``cache_kind(cfg)`` capability probe selects
+  the per-slot state family — ``"kv"`` (paged / dense attention KV),
+  ``"ring"`` (sliding-window ring lanes, O(window) per slot), ``"ssm"``
+  (mamba conv/ssm recurrent state, O(1) per slot), ``"hybrid"`` (hymba:
+  ring + ssm); non-KV kinds cannot be paged or prefix-cached, so those
+  knobs degrade gracefully (see ``README.md`` §Cache kinds).  Prompts
   are prefilled in bucket-padded chunks (2-3 compile widths) under a
   per-step token budget, interleaved with ONE jitted batched decode
   step — a long prompt never freezes the running decode lanes.  The
@@ -53,9 +59,11 @@ Five modules:
   latency + KV-memory + admission-stall stats.
 
 Greedy outputs are bit-identical across ``generate``, ``Engine``, both
-``ContinuousEngine`` layouts, and any prefill chunking — enforced by the
-differential harnesses in ``tests/test_paging.py`` and
-``tests/test_chunked_prefill.py``.  One carve-out: capacity-factor MoE
+``ContinuousEngine`` layouts, every cache kind, and any prefill
+chunking — enforced by the differential harnesses in
+``tests/test_paging.py``, ``tests/test_chunked_prefill.py``, and
+``tests/test_hetero_serving.py`` (hymba/mamba), with ring-buffer
+invariants property-tested in ``tests/test_ring_buffer.py``.  One carve-out: capacity-factor MoE
 routing is sequence-length-dependent, so MoE prompts see slightly
 different expert-capacity dropping under any padding or chunking of the
 prefill (this was already true of the monolithic padded prefill vs

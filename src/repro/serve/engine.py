@@ -3,10 +3,12 @@ baseline, and the continuous-batching ``ContinuousEngine``.
 
 ``generate`` is the jittable one-shot core (prefill + ``lax.scan`` decode);
 ``Engine`` keeps the fixed-slot lock-step shape (every row prefills and
-decodes together — still the right tool for SSM/encdec caches and for
+decodes together — still the right tool for encdec caches and for
 bit-exactness baselines).  ``ContinuousEngine`` is the serving system:
 requests are admitted into recyclable slots mid-flight, each slot carrying
-its own KV-cache lane, position counter, and sampling params.  Prompts are
+its own per-slot state — an attention KV lane (paged, dense, or
+ring-buffer), SSM conv/ssm recurrent state, or both (hymba) — plus a
+position counter and sampling params.  Prompts are
 prefilled in **bucket-padded chunks interleaved with decode steps** — a
 long prompt no longer freezes the running decode lanes for its whole
 prefill, and a prompt whose prefix is already resident in the paged pool
@@ -62,7 +64,7 @@ class Engine:
     """Fixed-slot lock-step batching (the pre-continuous baseline).
 
     One jitted prefill + one jitted decode step; every row moves together.
-    Kept for SSM/encdec cache families and as the equivalence baseline for
+    Kept for encdec cache families and as the equivalence baseline for
     ``ContinuousEngine``."""
 
     def __init__(self, model, cfg, *, batch: int, max_len: int,
@@ -177,12 +179,28 @@ class ContinuousEngine:
     :func:`repro.kernels.paged_attention` (interpret mode off-TPU).
     Greedy tokens are bit-identical across all of it.
 
+    **Heterogeneous per-slot state.**  The model declares its state
+    family through the ``cache_kind(cfg)`` capability probe: ``"kv"``
+    (global-attention transformers — both layouts above apply), ``"ring"``
+    (sliding-window transformers: per-slot ring lanes, ``slot(p) = p %
+    window``), ``"ssm"`` (mamba: per-slot conv/ssm recurrent state), and
+    ``"hybrid"`` (hymba: ring lanes + ssm state).  Non-``"kv"`` kinds
+    cannot be paged or prefix-cached — the state is either not
+    position-addressable (ssm) or O(window) by construction (ring) — so
+    admission degrades gracefully: the engine serves them through the
+    per-slot layout regardless of ``kv_layout``, with prefix reuse
+    auto-off and block reservation skipped.  Stale state from a recycled
+    slot never leaks: ring masks exclude lanes the new request has not
+    written, and the first prefill chunk zeros the slot's ssm lanes
+    in-graph.  Because recurrent/ring state has no out-of-range "parked"
+    row, the batched decode step freezes inactive slots by a slot-wise
+    select over the cache instead of relying on dropped writes.  Models
+    without a probe (whisper enc-dec) are rejected with a structured
+    :class:`UnsupportedCacheError` naming the remaining ROADMAP item.
+
     Streaming: ``stream()`` yields ``(uid, token, completion|None)`` as
     tokens land, and ``on_token`` (callable ``(uid, token)``) fires inside
     ``step()`` for push-style consumers.
-
-    Requires a global-attention KV cache (``cfg.window == 0``) — ring-buffer
-    lanes cannot be slot-recycled or paged yet (see ROADMAP).
     """
 
     def __init__(self, model, cfg, *, batch: int, max_len: int,
@@ -196,24 +214,35 @@ class ContinuousEngine:
                  prefill_chunk_budget: Optional[int] = None,
                  prefix_reuse: bool = True,
                  prefix_retain_blocks: Optional[int] = None):
-        if cfg.window:
+        probe = getattr(model, "cache_kind", None)
+        if probe is None:
             raise UnsupportedCacheError(
-                "continuous batching needs a global-attention KV cache "
-                f"(cfg.window == 0, got {cfg.window}); sliding-window "
-                "ring-buffer lanes cannot be slot-recycled or paged yet",
-                roadmap_item="ring-buffer (sliding-window) caches in "
-                "per-slot mode so hymba-family models can serve "
-                "continuously")
+                f"{type(model).__name__} declares no serving cache kind; "
+                "continuous batching needs per-slot state "
+                "(cache_kind(cfg) capability probe)",
+                roadmap_item="extend per-slot state to Whisper enc-dec "
+                "caches (encoder K/V + cross-attention lanes)")
+        self.cache_kind = probe(cfg)
+        if self.cache_kind not in ("kv", "ring", "ssm", "hybrid"):
+            raise UnsupportedCacheError(
+                f"{type(model).__name__} reports unknown cache kind "
+                f"{self.cache_kind!r}")
         if not 0 < max_prompt_len < max_len:
             raise ValueError("need 0 < max_prompt_len < max_len")
         if kv_layout not in ("paged", "dense"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
         if decode_kernel not in ("reference", "pallas"):
             raise ValueError(f"unknown decode_kernel {decode_kernel!r}")
-        if decode_kernel == "pallas" and kv_layout != "paged":
+        if decode_kernel == "pallas" and (kv_layout != "paged"
+                                          or self.cache_kind != "kv"):
             raise ValueError(
                 "decode_kernel='pallas' is the fused paged-attention "
-                "kernel; it requires kv_layout='paged'")
+                "kernel; it requires kv_layout='paged' (cache kind 'kv')")
+        if self.cache_kind != "kv":
+            # ring / ssm / hybrid state cannot be paged or prefix-cached:
+            # degrade gracefully to the per-slot layout (block reservation
+            # skipped, prefix reuse auto-off)
+            kv_layout = "dense"
         if chunk_size < 1:
             raise ValueError("need chunk_size >= 1")
         if buckets is None:
@@ -242,8 +271,8 @@ class ContinuousEngine:
             raise UnsupportedCacheError(
                 f"{type(model).__name__} has no chunked-prefill path; "
                 "continuous batching admits prompts chunk by chunk",
-                roadmap_item="extend per-slot state to Mamba conv/ssm "
-                "states and Whisper enc caches")
+                roadmap_item="extend per-slot state to Whisper enc-dec "
+                "caches (encoder K/V + cross-attention lanes)")
         if kv_layout == "paged":
             if block_size < 1:
                 raise ValueError("need block_size >= 1")
@@ -253,9 +282,7 @@ class ContinuousEngine:
             if not hasattr(model, "init_paged_cache"):
                 raise UnsupportedCacheError(
                     f"{type(model).__name__} has no paged KV cache; the "
-                    "paged layout supports attention-KV models only",
-                    roadmap_item="extend per-slot state to Mamba conv/ssm "
-                    "states and Whisper enc caches")
+                    "paged layout supports attention-KV models only")
             self.cache = model.init_paged_cache(
                 batch, max_len, cfg, n_blocks=self.n_blocks,
                 block_size=block_size, dtype=cache_dtype)
@@ -274,10 +301,11 @@ class ContinuousEngine:
                                               per_slot=True)
             except TypeError:
                 raise UnsupportedCacheError(
-                    f"{type(model).__name__} has no per-slot KV cache; "
-                    "continuous batching supports attention-KV models only",
-                    roadmap_item="extend per-slot state to Mamba conv/ssm "
-                    "states and Whisper enc caches")
+                    f"{type(model).__name__} has no per-slot cache; "
+                    "continuous batching needs independently advancing "
+                    "slot state",
+                    roadmap_item="extend per-slot state to Whisper "
+                    "enc-dec caches (encoder K/V + cross-attention lanes)")
             self.manager = None
             self._park_pos = max_len
         self.state = _SlotArrays(
@@ -338,20 +366,35 @@ class ContinuousEngine:
         else:
             model_decode = model.decode
 
+        stateful = self.cache_kind != "kv"
+
         def decode_fn(cache, state, key):
             logits, new_cache = model_decode(state.tok[:, None], cache)
             nxt = sample_tokens(logits[:, 0], state.temp, key)
             nxt = jnp.where(state.active, nxt, state.tok)
-            # frozen slots keep their cache position and token
-            length = jnp.where(state.active[None, :], new_cache.length,
-                               cache.length)
+            if stateful:
+                # ring / recurrent state has no out-of-range park row the
+                # scatter could drop into: freeze inactive slots (finished
+                # or mid-chunked-prefill) by a slot-wise select over the
+                # whole cache — every leaf carries the slot axis at dim 1
+                act = state.active
+                new_cache = jax.tree_util.tree_map(
+                    lambda n, o: jnp.where(
+                        act.reshape((1, -1) + (1,) * (n.ndim - 2)), n, o),
+                    new_cache, cache)
+                length = new_cache.length
+            else:
+                # frozen slots keep their cache position and token
+                length = jnp.where(state.active[None, :], new_cache.length,
+                                   cache.length)
+                new_cache = new_cache._replace(length=length)
             n_gen = jnp.where(state.active, state.n_gen + 1, state.n_gen)
             stop_hit = jnp.any(nxt[:, None] == state.stop_ids, axis=-1)
             done = state.active & (stop_hit | (n_gen >= state.max_new)
                                    | (length[0] >= max_len))
             state = state._replace(tok=nxt, active=state.active & ~done,
                                    n_gen=n_gen)
-            return new_cache._replace(length=length), state, nxt, done
+            return new_cache, state, nxt, done
 
         # ONE jit per role; the chunk jits specialize per bucket width (the
         # buckets bound how many widths ever occur).  Mid-prompt chunks use
@@ -605,15 +648,32 @@ class ContinuousEngine:
         pins a ``max_len`` lane), for the paged layout the peak tracks
         blocks actually in use, which is what a right-sized pool would
         need.  Parked (LRU-retained) prefix blocks are reclaimable warm
-        capacity and excluded from the in-use numbers."""
-        alloc = 2 * self.cache.k.size * self.cache.k.dtype.itemsize
+        capacity and excluded from the in-use numbers.  For the stateful
+        kinds (ring / ssm / hybrid) the accounting covers every state
+        leaf (KV lanes + conv/ssm buffers), and ``kv_lane_tokens``
+        reports the per-slot lane length — ``window`` for ring lanes (the
+        O(window)-not-O(max_len) bound the benchmark asserts), absent for
+        pure-SSM state."""
         if self.manager is None:
-            return {"kv_layout": "dense", "kv_allocated_bytes": alloc,
-                    "kv_peak_resident_bytes": alloc}
+            leaves = {f: a for f, a in zip(self.cache._fields, self.cache)
+                      if f not in ("length", "table")}
+            alloc = sum(a.size * a.dtype.itemsize for a in leaves.values())
+            stats = {"kv_layout": self.kv_layout,
+                     "cache_kind": self.cache_kind,
+                     "kv_allocated_bytes": alloc,
+                     "kv_peak_resident_bytes": alloc}
+            if "k" in leaves:  # per-slot KV lanes (dense or ring)
+                k = leaves["k"]
+                stats["kv_lane_tokens"] = k.shape[2]
+                if self.cache_kind in ("ring", "hybrid"):
+                    stats["kv_ring_bytes"] = 2 * k.size * k.dtype.itemsize
+            return stats
+        alloc = 2 * self.cache.k.size * self.cache.k.dtype.itemsize
         block_bytes = 2 * (self.cache.k.size // self.n_blocks
                            ) * self.cache.k.dtype.itemsize
         a = self.manager.allocator
-        return {"kv_layout": "paged", "kv_allocated_bytes": alloc,
+        return {"kv_layout": "paged", "cache_kind": self.cache_kind,
+                "kv_allocated_bytes": alloc,
                 "kv_peak_resident_bytes": a.peak_in_use * block_bytes,
                 "block_size": self.block_size, "n_blocks": self.n_blocks,
                 "peak_blocks_in_use": a.peak_in_use,

@@ -168,11 +168,17 @@ def format_kv_stats(label: str, stats: dict) -> str:
     """One-line render of ``ContinuousEngine.kv_stats()`` (merged into
     ``bench_trace`` stats) — the single formatter for every driver."""
     extra = ""
-    if stats["kv_layout"] == "paged":
+    layout = stats["kv_layout"]
+    kind = stats.get("cache_kind", "kv")
+    if layout == "paged":
         extra = (f"   ({stats['peak_blocks_in_use']}/{stats['n_blocks']} "
                  f"blocks x {stats['block_size']} tok, "
                  f"{stats['prefix_hit_tokens']} prefix-hit tok)")
-    return (f"{label:11s}: KV[{stats['kv_layout']}] resident "
+    elif kind != "kv":  # per-slot ring / ssm / hybrid state
+        layout = kind
+        if "kv_lane_tokens" in stats:
+            extra = f"   (ring lanes x {stats['kv_lane_tokens']} tok)"
+    return (f"{label:11s}: KV[{layout}] resident "
             f"{stats['kv_peak_resident_bytes'] / 1024:8.1f} KiB / allocated "
             f"{stats['kv_allocated_bytes'] / 1024:8.1f} KiB{extra}")
 

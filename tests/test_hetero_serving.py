@@ -1,0 +1,190 @@
+"""Heterogeneous per-slot state: hymba + mamba through ContinuousEngine.
+
+The extended differential serving matrix (the test_paging /
+test_chunked_prefill style, pushed to the new state families): seeded
+random traces with mixed prompt lengths and staggered Poisson arrivals
+are replayed through THREE independent decode paths — one-shot
+``generate``, the lock-step ``Engine``, and the chunked-prefill
+``ContinuousEngine`` — for the hybrid (hymba: sliding-window ring KV +
+SSM state) and pure-SSM (mamba2) families, and the greedy tokens must be
+IDENTICAL across all of them.  On top sit the state-machinery edges:
+chunk boundaries landing exactly on the sliding-window edge, slot
+recycling across requests (stale ring lanes / ssm state must never
+leak), and the O(window) / O(1) decode-memory shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import ContinuousEngine, Engine, generate, make_trace, replay
+
+
+@pytest.fixture(scope="module")
+def hymba():
+    cfg = get_config("hymba-1.5b").reduced()
+    return build_model(jax.random.PRNGKey(0), cfg), cfg
+
+
+@pytest.fixture(scope="module")
+def mamba():
+    cfg = get_config("mamba2-2.7b").reduced()
+    return build_model(jax.random.PRNGKey(0), cfg), cfg
+
+
+def _baseline(model, cfg, prompt, n, max_len=32):
+    cache = model.init_cache(1, max_len, cfg, dtype=jnp.float32)
+    out, _ = generate(model, jnp.asarray(prompt)[None, :], cache, n_steps=n)
+    return np.asarray(out)[0]
+
+
+def _prompts(lengths, vocab, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, n).astype(np.int32) for n in lengths]
+
+
+def _assert_three_way(model, cfg, trace, comps, label):
+    """Every completion must match generate AND the lock-step Engine."""
+    assert len(comps) == len(trace)
+    lock = Engine(model, cfg, batch=1, max_len=32, cache_dtype=jnp.float32)
+    for (_, req), c in zip(trace, comps):  # trace order == uid order
+        n = req.max_new_tokens
+        ref_gen = _baseline(model, cfg, req.prompt, n)
+        lock.reset()
+        ref_lock = np.asarray(
+            lock.greedy(jnp.asarray(req.prompt)[None, :], n))[0]
+        np.testing.assert_array_equal(ref_gen, ref_lock)
+        np.testing.assert_array_equal(
+            np.array(c.tokens), ref_gen,
+            err_msg=f"{label} diverged for uid={c.uid} "
+                    f"plen={req.prompt.size} n={n}")
+        assert c.prompt_len == req.prompt.size
+        assert len(c.tokens) == n
+        assert c.latency >= c.ttft >= 0
+
+
+# ---- differential: ContinuousEngine == Engine == generate -------------------
+
+
+@pytest.mark.parametrize("chunk,buckets", [(4, (4, 8)), (8, (8,))])
+def test_hymba_differential_trace_three_way(hymba, chunk, buckets):
+    """Hybrid family: ring KV + SSM per-slot state through recycled slots.
+    ``chunk == 8 == cfg.window`` lands every chunk boundary exactly on
+    the sliding-window edge (the wraparound case); ``chunk == 4`` puts
+    boundaries mid-window."""
+    model, cfg = hymba
+    assert cfg.window == 8  # the window-edge parametrization relies on it
+    trace = make_trace(10, seed=13, load=0.7, min_prompt=2, max_prompt=16,
+                       min_new=2, max_new=8, vocab=cfg.vocab)
+    eng = ContinuousEngine(model, cfg, batch=3, max_len=32,
+                           max_prompt_len=16, chunk_size=chunk,
+                           buckets=buckets, prefill_chunk_budget=chunk)
+    comps, _ = replay(eng, trace)
+    _assert_three_way(model, cfg, trace, comps, f"hymba chunk={chunk}")
+    # decode memory is O(window) per slot, not O(max_len)
+    stats = eng.kv_stats()
+    assert stats["cache_kind"] == "hybrid"
+    assert stats["kv_lane_tokens"] == cfg.window < eng.max_len
+
+
+def test_mamba_differential_trace_three_way(mamba):
+    """Pure-SSM family: conv/ssm per-slot state, chunked scan-in."""
+    model, cfg = mamba
+    trace = make_trace(10, seed=13, load=0.7, min_prompt=2, max_prompt=16,
+                       min_new=2, max_new=8, vocab=cfg.vocab)
+    eng = ContinuousEngine(model, cfg, batch=3, max_len=32,
+                           max_prompt_len=16, chunk_size=4, buckets=(4, 8),
+                           prefill_chunk_budget=4)
+    comps, _ = replay(eng, trace)
+    _assert_three_way(model, cfg, trace, comps, "mamba")
+    stats = eng.kv_stats()
+    assert stats["cache_kind"] == "ssm"
+    assert "kv_lane_tokens" not in stats  # no position-addressable lanes
+
+
+def test_swa_transformer_rides_the_ring_path():
+    """A sliding-window TransformerLM (cache kind 'ring') serves through
+    the same per-slot ring lanes — the kind probe is per-config, not
+    per-class."""
+    cfg = get_config("paper-tiny").reduced().replace(window=8)
+    model = build_model(jax.random.PRNGKey(0), cfg)
+    assert model.cache_kind(cfg) == "ring"
+    assert model.cache_kind(cfg.replace(window=0)) == "kv"
+    trace = make_trace(6, seed=3, load=0.7, min_prompt=2, max_prompt=16,
+                       min_new=2, max_new=6, vocab=cfg.vocab)
+    eng = ContinuousEngine(model, cfg, batch=2, max_len=32,
+                           max_prompt_len=16, chunk_size=8, buckets=(4, 8))
+    comps, _ = replay(eng, trace)
+    _assert_three_way(model, cfg, trace, comps, "swa-transformer")
+    assert eng.kv_stats()["kv_lane_tokens"] == cfg.window
+
+
+# ---- window-edge prompt lengths ---------------------------------------------
+
+
+@pytest.mark.parametrize("plen", [7, 8, 9, 15, 16])
+def test_hymba_prompt_lengths_around_window_edge(hymba, plen):
+    """Prompt lengths straddling multiples of the window with chunk ==
+    window: the final chunk boundary lands exactly ON the edge (8, 16),
+    one short (7, 15), and one past (9) — ring wraparound in every
+    phase."""
+    model, cfg = hymba
+    p = _prompts([plen], cfg.vocab, seed=plen)[0]
+    eng = ContinuousEngine(model, cfg, batch=2, max_len=32,
+                           max_prompt_len=16, chunk_size=cfg.window,
+                           buckets=(cfg.window,))
+    eng.submit(p, max_new_tokens=6)
+    (comp,) = eng.run()
+    np.testing.assert_array_equal(np.array(comp.tokens),
+                                  _baseline(model, cfg, p, 6))
+
+
+# ---- slot recycling: stale state must never leak ----------------------------
+
+
+@pytest.mark.parametrize("family", ["hymba", "mamba"])
+def test_recycled_slot_state_does_not_leak(hymba, mamba, family):
+    """Drive enough staggered requests through a 1-slot engine that every
+    request after the first reuses a slot whose ring lanes / ssm state
+    still hold the previous occupant's bytes — each must match a
+    fresh-engine baseline exactly."""
+    model, cfg = hymba if family == "hymba" else mamba
+    prompts = _prompts([9, 5, 12, 3], cfg.vocab, seed=21)
+    eng = ContinuousEngine(model, cfg, batch=1, max_len=32,
+                           max_prompt_len=16, chunk_size=4, buckets=(4, 8))
+    for p in prompts:
+        eng.submit(p, max_new_tokens=5)
+    comps = eng.run()
+    assert len(comps) == len(prompts)
+    for p, c in zip(prompts, comps):
+        np.testing.assert_array_equal(
+            np.array(c.tokens), _baseline(model, cfg, p, 5),
+            err_msg=f"{family}: recycled slot leaked state into "
+                    f"plen={p.size}")
+
+
+# ---- mixed decode batch: slots at independent positions ---------------------
+
+
+def test_hymba_interleaved_admission_mid_decode(hymba):
+    """A second request admitted while the first is mid-decode: the
+    batched decode step advances both slots at independent positions
+    (and the prefilling slot's state is frozen during the overlap)."""
+    model, cfg = hymba
+    pa, pb = _prompts([11, 6], cfg.vocab, seed=5)
+    eng = ContinuousEngine(model, cfg, batch=2, max_len=32,
+                           max_prompt_len=16, chunk_size=4, buckets=(4,),
+                           prefill_chunk_budget=4)
+    eng.submit(pa, max_new_tokens=8)
+    for _ in range(3):  # pa mid-flight before pb arrives
+        eng.step()
+    eng.submit(pb, max_new_tokens=8)
+    comps = eng.run()
+    by_len = {c.prompt_len: c for c in comps}
+    np.testing.assert_array_equal(np.array(by_len[11].tokens),
+                                  _baseline(model, cfg, pa, 8))
+    np.testing.assert_array_equal(np.array(by_len[6].tokens),
+                                  _baseline(model, cfg, pb, 8))

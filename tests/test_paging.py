@@ -176,31 +176,58 @@ def test_cache_full_frozen_slot_does_not_corrupt_neighbors(setup):
             f"frozen cache-full slot corrupted prompt_len={plen}"
 
 
-# ---- structured rejection (UnsupportedCacheError) ---------------------------
+# ---- cache-kind capability probe (serve / structured rejection) -------------
 
 
-def test_hymba_rejected_with_unsupported_cache_error():
-    """Regression for the former bare ValueError: sliding-window (hymba)
-    configs must be rejected with the structured error naming the
-    ring-buffer ROADMAP item."""
+def test_hymba_serves_continuously():
+    """Regression FLIP: sliding-window (hymba) configs used to be rejected
+    with UnsupportedCacheError at construction — they now serve through
+    per-slot ring + ssm state, degrading the default paged layout
+    gracefully (prefix reuse off, no block reservation), with tokens
+    matching the one-shot baseline."""
     cfg = get_config("hymba-1.5b").reduced()
+    model = build_model(jax.random.PRNGKey(0), cfg)
+    eng = ContinuousEngine(model, cfg, batch=2, max_len=32, max_prompt_len=8)
+    stats = eng.kv_stats()
+    assert stats["cache_kind"] == "hybrid"
+    assert eng.manager is None  # block reservation / prefix cache inactive
+    assert stats["kv_lane_tokens"] == cfg.window  # ring lanes, not max_len
+    prompt = _prompts([6], cfg.vocab, seed=1)[0]
+    eng.submit(prompt, max_new_tokens=5)
+    (comp,) = eng.run()
+    np.testing.assert_array_equal(np.array(comp.tokens),
+                                  _baseline(model, cfg, prompt, 5))
+
+
+def test_ssm_serves_continuously_in_both_requested_layouts():
+    """Mamba used to raise in both layouts; the engine now serves it via
+    per-slot conv/ssm state whichever layout the caller asked for (paged
+    knobs degrade gracefully)."""
+    cfg = get_config("mamba2-2.7b").reduced()
+    model = build_model(jax.random.PRNGKey(0), cfg)
+    prompt = _prompts([7], cfg.vocab, seed=2)[0]
+    ref = _baseline(model, cfg, prompt, 4)
+    for layout in ("paged", "dense"):
+        eng = ContinuousEngine(model, cfg, batch=2, max_len=32,
+                               max_prompt_len=8, kv_layout=layout)
+        assert eng.kv_stats()["cache_kind"] == "ssm"
+        eng.submit(prompt, max_new_tokens=4)
+        (comp,) = eng.run()
+        np.testing.assert_array_equal(np.array(comp.tokens), ref)
+
+
+def test_whisper_rejected_with_unsupported_cache_error():
+    """The mirror-image regression: enc-dec (whisper) still has no
+    per-slot state and must be rejected with the structured error naming
+    the remaining ROADMAP item (roadmap_item coverage survives the hymba
+    flip)."""
+    cfg = get_config("whisper-medium").reduced()
     model = build_model(jax.random.PRNGKey(0), cfg)
     with pytest.raises(UnsupportedCacheError) as ei:
         ContinuousEngine(model, cfg, batch=2, max_len=32, max_prompt_len=8)
-    assert "ring-buffer" in str(ei.value)
-    assert "ring-buffer" in ei.value.roadmap_item
+    assert "Whisper" in ei.value.roadmap_item
+    assert "enc-dec" in ei.value.roadmap_item
     assert isinstance(ei.value, ValueError)  # backwards compatible
-
-
-def test_ssm_rejected_with_unsupported_cache_error():
-    """Cache families without a paged/per-slot layout (mamba) get the same
-    structured error in both layouts."""
-    cfg = get_config("mamba2-2.7b").reduced()
-    model = build_model(jax.random.PRNGKey(0), cfg)
-    for layout in ("paged", "dense"):
-        with pytest.raises(UnsupportedCacheError):
-            ContinuousEngine(model, cfg, batch=2, max_len=32,
-                             max_prompt_len=8, kv_layout=layout)
 
 
 # ---- allocator / prefix-cache unit tests ------------------------------------

@@ -13,8 +13,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import (ContinuousEngine, Request, Scheduler,
-                         UnsupportedCacheError, generate)
+from repro.serve import ContinuousEngine, Request, Scheduler, generate
 
 
 @pytest.fixture(scope="module")
@@ -216,16 +215,17 @@ def test_continuous_with_factorized_model(setup):
                                       _baseline(fact, cfg, p, 5))
 
 
-def test_window_model_rejected(setup):
-    """Sliding-window configs raise the structured UnsupportedCacheError
-    (still a ValueError for old callers) naming the ring-buffer ROADMAP
-    item."""
+def test_window_model_degrades_to_ring_lanes(setup):
+    """Regression FLIP: sliding-window configs used to raise the
+    structured UnsupportedCacheError here — they now serve through
+    per-slot ring lanes, with the paged machinery (block reservation,
+    prefix cache) degraded away."""
     model, cfg = setup
-    with pytest.raises(UnsupportedCacheError) as ei:
-        ContinuousEngine(model, cfg.replace(window=8), batch=2, max_len=32,
-                         max_prompt_len=12)
-    assert "ring-buffer" in str(ei.value)
-    assert ei.value.roadmap_item is not None
+    eng = ContinuousEngine(model, cfg.replace(window=8), batch=2,
+                           max_len=32, max_prompt_len=12)
+    assert eng.cache_kind == "ring"
+    assert eng.manager is None
+    assert eng.kv_stats()["kv_lane_tokens"] == 8
 
 
 def test_out_of_blocks_admission_defers_fifo(setup):

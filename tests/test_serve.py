@@ -58,14 +58,11 @@ def test_temperature_sampling_runs(key):
     assert int(out.max()) < cfg.vocab
 
 
-def test_engine_with_ssm_cache(key):
-    """The engine must work with SSM-state caches (mamba family)."""
-    from repro.configs import get_config as gc
-
-    cfg = gc("mamba2-2.7b").reduced()
-    from repro.models import build_model as bm
-
-    model = bm(key, cfg)
+def test_lockstep_engine_with_ssm_cache(key):
+    """The lock-step Engine must work with SSM-state caches (mamba
+    family) — the fixed-batch baseline path."""
+    cfg = get_config("mamba2-2.7b").reduced()
+    model = build_model(key, cfg)
     eng = Engine(model, cfg, batch=2, max_len=24, cache_dtype=jnp.float32)
     toks = jax.random.randint(key, (2, 8), 0, cfg.vocab)
     out = eng.greedy(toks, 4)
@@ -75,6 +72,27 @@ def test_engine_with_ssm_cache(key):
     logits, _ = model(seq)
     ref = jnp.argmax(logits[:, 7:-1], axis=-1)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_continuous_engine_with_ssm_cache(key):
+    """The continuous engine serves the same SSM family through per-slot
+    conv/ssm state — separate, non-shadowing coverage from the lock-step
+    case above (this used to be a single Engine-only test)."""
+    from repro.serve import ContinuousEngine
+
+    cfg = get_config("mamba2-2.7b").reduced()
+    model = build_model(key, cfg)
+    toks = jax.random.randint(key, (2, 8), 0, cfg.vocab)
+    lock = Engine(model, cfg, batch=2, max_len=24, cache_dtype=jnp.float32)
+    ref = np.asarray(lock.greedy(toks, 4))
+    eng = ContinuousEngine(model, cfg, batch=2, max_len=24,
+                           max_prompt_len=12, chunk_size=4)
+    for row in np.asarray(toks):
+        eng.submit(row.astype(np.int32), max_new_tokens=4)
+    comps = eng.run()
+    assert eng.kv_stats()["cache_kind"] == "ssm"
+    for row, c in zip(ref, comps):
+        np.testing.assert_array_equal(np.array(c.tokens), row)
 
 
 def test_engine_with_factorized_model(key):

@@ -16,8 +16,23 @@ matrix (all greedy tokens asserted bit-identical where applicable):
   tokens (asserted >= 2x below the dense reservation).
 * ``paged+pallas`` — same layout, fused paged-attention decode kernel
   (interpret mode on CPU).
-* ``paged+fact`` — the paper's post-training use case: the model is
-  SVD-factorized with ``auto_fact`` and served through the same engine.
+* ``paged+fact@R`` — the paper's post-training use case: the model is
+  SVD-factorized with ``auto_fact`` at rank ratios 0.25/0.5/0.75 and
+  served through the same engine (the **rank frontier**: greedy
+  agreement vs dense, tokens/s, params and per-layer reconstruction
+  error per rank).  The benchmark model's singular spectra are shaped
+  to a power-law decay first (``spectral_decay``, alpha=2.5): random
+  init has a flat Marchenko-Pastur spectrum where truncation at any
+  rank destroys the logits — the old 3% agreement number measured that
+  spectrum, not a serving bug — while trained networks (the regime the
+  paper compresses) decay fast.  Agreement at ratio 0.5 is asserted
+  >= 0.9 and exported as ``greedy_agreement_dense_vs_fact``.
+* ``paged+spec`` — speculative decoding: a rank-0.5 factorized draft
+  proposes ``k`` greedy tokens per round, the dense verifier re-scores
+  them in ONE multi-token decode and commits the agreeing prefix plus
+  its own next token.  Greedy tokens asserted bit-identical to the
+  plain paged replay; acceptance rate and draft/verify step times land
+  in the summary.
 
 Two chunked-prefill experiments then demonstrate the admission-path wins:
 
@@ -64,7 +79,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import auto_fact
+from repro.core import auto_fact, spectral_decay
 from repro.models import build_model
 from repro.serve import (ContinuousEngine, bench_trace, format_kv_stats,
                          format_prefill_stats, format_stats, generate,
@@ -98,6 +113,41 @@ def decode_step_ms(model, cfg, *, batch, max_len, max_prompt_len,
     return (time.perf_counter() - t0) / iters * 1e3
 
 
+def spec_step_ms(model, draft, cfg, *, batch, max_prompt_len, block_size,
+                 spec_k, iters=10, warmup=2) -> tuple:
+    """Mean wall time of the two halves of one speculative round with
+    every slot live: the k-step factorized draft scan and the single
+    dense multi-token verify.  Drives the jitted pair directly (the
+    engine's python bookkeeping is bypassed), so ``max_len`` is sized to
+    keep every timed round's positions in range."""
+    max_len = max_prompt_len + (warmup + iters + 2) * spec_k + 8
+    eng = ContinuousEngine(model, cfg, batch=batch, max_len=max_len,
+                           max_prompt_len=max_prompt_len, kv_layout="paged",
+                           block_size=block_size,
+                           prefill_chunk_budget=10**9,
+                           draft_model=draft, spec_k=spec_k)
+    rng = np.random.default_rng(0)
+    for _ in range(batch):
+        eng.submit(rng.integers(0, cfg.vocab, max_prompt_len - 1)
+                   .astype(np.int32), max_new_tokens=max_len)
+    eng.step()  # admit every slot + compile + run the first spec round
+    draft_s = verify_s = 0.0
+    for i in range(warmup + iters):
+        t0 = time.perf_counter()
+        eng.draft_cache, drafts = eng._spec_draft(
+            eng.draft_cache, eng.cache.length, eng.state)
+        jax.block_until_ready(drafts)
+        t1 = time.perf_counter()
+        out = eng._spec_verify(eng.cache, eng.state, drafts)
+        eng.cache, eng.state = out[0], out[1]
+        jax.block_until_ready(out[2])
+        t2 = time.perf_counter()
+        if i >= warmup:
+            draft_s += t1 - t0
+            verify_s += t2 - t1
+    return draft_s / iters * 1e3, verify_s / iters * 1e3
+
+
 def run(*, smoke: bool = False, fact_rank: float = 0.5, solver: str = "svd",
         seed: int = 0) -> tuple:
     cfg = get_config("paper-tiny")
@@ -114,7 +164,11 @@ def run(*, smoke: bool = False, fact_rank: float = 0.5, solver: str = "svd",
         long_prompt, long_frac = 24, 0.3
         step_iters = 10
 
-    model = build_model(jax.random.PRNGKey(0), cfg)
+    # shape the singular spectra to the trained-network regime (random
+    # init is flat Marchenko-Pastur — see the module docstring) so the
+    # rank frontier below measures the paper's use case, not init noise
+    model = spectral_decay(build_model(jax.random.PRNGKey(0), cfg), 2.5,
+                           exclude=["embed", "lm_head"])
     trace = make_trace(n_requests, seed=seed, load=load, min_prompt=4,
                        max_prompt=max_prompt // 2, min_new=4,
                        max_new=max_new, vocab=cfg.vocab)
@@ -268,20 +322,73 @@ def run(*, smoke: bool = False, fact_rank: float = 0.5, solver: str = "svd",
           f"gather {gather_ms:.2f} ms vs fused {fused_ms:.2f} ms "
           f"[{backend}{'' if backend == 'tpu' else ', interpret'}]")
 
-    fact = auto_fact(model, fact_rank, solver=solver,
-                     key=jax.random.PRNGKey(1),
-                     exclude=["embed", "lm_head"])
-    fact_done, fstats = bench_trace(fact, cfg, trace, **dims,
-                                    kv_layout="paged",
-                                    block_size=block_size)
-    print(format_stats("paged+fact", fstats))
-    rows.append({"variant": f"paged+fact@{fact_rank}", **fstats})
+    # ---- rank frontier: quality vs compression of the served model ---------
+    ratios = sorted({0.25, 0.5, 0.75, fact_rank})
+    frontier = []
+    agree_at = {}
+    for ratio in ratios:
+        fact, rep = auto_fact(model, ratio, solver=solver,
+                              key=jax.random.PRNGKey(1),
+                              exclude=["embed", "lm_head"], gate=False,
+                              return_report=True)
+        fact_done, fstats = bench_trace(fact, cfg, trace, **dims,
+                                        kv_layout="paged",
+                                        block_size=block_size)
+        assert len(fact_done) == n_requests
+        agree = greedy_agreement(dense_done, fact_done)
+        agree_at[ratio] = agree
+        worst_err = max(e[5] for e in rep.entries)
+        print(format_stats(f"fact@{ratio}", fstats))
+        print(f"fact@{ratio}: agreement {agree:.1%}, "
+              f"{rep.params_before:,} -> {rep.params_after:,} params "
+              f"({rep.compression:.2f}x), worst layer rel_err "
+              f"{worst_err:.4f}")
+        rows.append({"variant": f"paged+fact@{ratio}", **fstats})
+        frontier.append({
+            "rank_ratio": ratio,
+            "solver": solver,
+            "greedy_agreement": agree,
+            "tokens_per_s": fstats["tokens_per_s"],
+            "params_before": rep.params_before,
+            "params_after": rep.params_after,
+            "compression_x": rep.compression,
+            "max_layer_rel_err": worst_err,
+        })
+    headline = agree_at[fact_rank]
+    assert headline >= 0.9, \
+        f"factorized serving regressed: agreement@{fact_rank} = {headline}"
 
-    agree = greedy_agreement(dense_done, fact_done)
-    print(f"greedy token agreement dense vs factorized: {agree:.1%}")
+    # ---- speculative decoding: low-rank draft, dense verify ----------------
+    spec_k = 4
+    draft = auto_fact(model, 0.5, solver="svd",
+                      exclude=["embed", "lm_head"], gate=False)
+    spec_done, sstats = bench_trace(model, cfg, trace, **dims,
+                                    kv_layout="paged",
+                                    block_size=block_size,
+                                    draft_model=draft, spec_k=spec_k)
+    print(format_stats("paged+spec", sstats))
+    rows.append({"variant": f"paged+spec@k{spec_k}", **sstats})
+    for cp, cs in zip(paged_done, spec_done):
+        assert cp.tokens == cs.tokens, \
+            f"speculative divergence (prompt_len={cp.prompt_len})"
+    assert sstats["spec_acceptance_rate"] > 0.0, \
+        "rank-0.5 draft accepted nothing — draft path broken"
+    print(f"speculative decode: k={spec_k} rounds={sstats['spec_rounds']} "
+          f"accepted {sstats['spec_accepted_tokens']}"
+          f"/{sstats['spec_drafted_tokens']} drafted "
+          f"({sstats['spec_acceptance_rate']:.1%}); greedy tokens "
+          "bit-identical to the plain paged replay")
+
+    draft_ms, verify_ms = spec_step_ms(model, draft, cfg, batch=batch,
+                                       max_prompt_len=max_prompt,
+                                       block_size=block_size, spec_k=spec_k,
+                                       iters=step_iters)
+    print(f"spec round ({batch} slots): draft {draft_ms:.2f} ms "
+          f"(k={spec_k} factorized steps) + verify {verify_ms:.2f} ms "
+          f"(1 dense multi-token step)")
 
     # sanity: every request drained, token budgets respected
-    for done in (dense_done, paged_done, fused_done, fact_done,
+    for done in (dense_done, paged_done, fused_done, spec_done,
                  mono_done, chunk_done, reuse_done, plain_done):
         assert len(done) == n_requests
         assert all(len(c.tokens) >= 1 for c in done)
@@ -323,7 +430,20 @@ def run(*, smoke: bool = False, fact_rank: float = 0.5, solver: str = "svd",
             "ring_residency_reduction_x": ring_reduction,
             "tokens_identical_to_generate": True,  # asserted above
         },
-        "greedy_agreement_dense_vs_fact": agree,
+        "greedy_agreement_dense_vs_fact": headline,
+        "fact_frontier": frontier,
+        "spec_decode": {
+            "spec_k": spec_k,
+            "draft_rank_ratio": 0.5,
+            "rounds": sstats["spec_rounds"],
+            "drafted_tokens": sstats["spec_drafted_tokens"],
+            "accepted_tokens": sstats["spec_accepted_tokens"],
+            "acceptance_rate": sstats["spec_acceptance_rate"],
+            "tokens_per_s": sstats["tokens_per_s"],
+            "draft_step_ms": draft_ms,
+            "verify_step_ms": verify_ms,
+            "tokens_identical_to_dense": True,  # asserted above
+        },
         "rows": rows,
     }
     return rows, summary

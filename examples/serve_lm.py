@@ -2,9 +2,14 @@
 serving side) over the paged KV cache with chunked, prefix-aware prefill.
 
     PYTHONPATH=src python examples/serve_lm.py --reduced --batch 4 \
-        --n-requests 16 --fact-rank 0.5 --shared-prefix 16 \
+        --n-requests 16 --factorize --rank 0.5 --shared-prefix 16 \
         --kv-layout paged --block-size 8 --decode-kernel pallas \
         --chunk-size 8 --prefill-budget 8
+
+    # speculative decoding: rank-0.5 factorized draft, dense verify,
+    # bit-exact greedy output (asserted), acceptance rate printed
+    PYTHONPATH=src python examples/serve_lm.py --reduced --batch 4 \
+        --n-requests 8 --spec-k 4
 
     # SSE-style streaming: one `data:` line per token as it lands
     PYTHONPATH=src python examples/serve_lm.py --reduced --batch 4 \
@@ -25,7 +30,10 @@ paged-attention kernel), ``--chunk-size`` / ``--buckets`` /
 ``--prefill-budget`` shape the admission pipeline, ``--shared-prefix`` /
 ``--no-prefix-reuse`` / ``--prefix-retain`` exercise the prefix cache,
 and ``--long-frac`` / ``--long-prompt`` mix a heavy prompt tail into the
-Poisson trace.
+Poisson trace.  ``--factorize --rank R --solver svd`` serves the
+``auto_fact``-factorized model and reports dense-vs-factorized greedy
+agreement; ``--spec-k K`` runs speculative decoding (rank-``R``
+factorized draft + dense multi-token verify, bit-exact greedy).
 
 **The admission pipeline** (see ``src/repro/serve/README.md``): a prompt
 is prefilled in ``chunk_size``-token chunks, each right-padded to one of

@@ -1,5 +1,6 @@
 from repro.core.auto_fact import auto_fact, defactorize, FactReport
 from repro.core.rank import r_max, resolve_rank, should_factorize
+from repro.core.spectral import decay_singular_values, spectral_decay
 from repro.core.solvers import (SOLVERS, get_solver, random_solver, snmf_solver,
                                 svd_solver)
 from repro.core.gradcomp import (CompressorState, compress_and_reduce,
@@ -9,6 +10,7 @@ __all__ = [
     "auto_fact", "defactorize", "FactReport",
     "r_max", "resolve_rank", "should_factorize",
     "SOLVERS", "get_solver", "random_solver", "svd_solver", "snmf_solver",
+    "decay_singular_values", "spectral_decay",
     "CompressorState", "compress_and_reduce", "compression_ratio",
     "init_compressor",
 ]

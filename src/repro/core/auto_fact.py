@@ -39,20 +39,25 @@ from repro.nn.module import Module, map_modules
 class FactReport:
     """What auto_fact did, layer by layer."""
 
-    entries: list = field(default_factory=list)  # (path, kind, m, n, r) tuples
+    # (path, kind, m, n, r, rel_err) — rel_err is the relative Frobenius
+    # reconstruction error ||W - A@B||_F / ||W||_F over the whole (possibly
+    # stacked) weight, so a bad solve is localizable to its layer.
+    entries: list = field(default_factory=list)
     skipped: list = field(default_factory=list)  # (path, reason)
     params_before: int = 0
     params_after: int = 0
 
     @property
     def compression(self) -> float:
-        return self.params_before / max(self.params_after, 1)
+        if self.params_after == 0:
+            return 1.0  # nothing factorized → no compression, not 0x
+        return self.params_before / self.params_after
 
     def summary(self) -> str:
         lines = [f"auto_fact: {len(self.entries)} layers factorized, "
                  f"{len(self.skipped)} skipped"]
-        lines += [f"  [fact] {p} ({kind}) {m}x{n} -> r={r}"
-                  for p, kind, m, n, r in self.entries]
+        lines += [f"  [fact] {p} ({kind}) {m}x{n} -> r={r} rel_err={e:.4f}"
+                  for p, kind, m, n, r, e in self.entries]
         lines += [f"  [skip] {p}: {why}" for p, why in self.skipped]
         if self.params_before:
             lines.append(
@@ -71,6 +76,29 @@ def _layer_key(base_key, path: str):
     return jax.random.fold_in(base_key, zlib.crc32(path.encode()) & 0x7FFFFFFF)
 
 
+def _rel_err(w, a, b) -> float:
+    """Relative Frobenius reconstruction error of W ≈ A @ B (stack-aware)."""
+    w32 = w.astype(jnp.float32)
+    diff = a.astype(jnp.float32) @ b.astype(jnp.float32) - w32
+    denom = jnp.maximum(jnp.linalg.norm(w32.reshape(-1)), 1e-30)
+    return float(jnp.linalg.norm(diff.reshape(-1)) / denom)
+
+
+def _resolve_ungated(rank: Rank, m: int, n: int) -> int:
+    """Rank resolution when the r_max gate is off: float ratios scale
+    min(m, n) (so ``rank=1.0`` is an exact full-rank factorization) and
+    int ranks are clamped to min(m, n)."""
+    if isinstance(rank, bool) or not isinstance(rank, (int, float)):
+        raise TypeError(f"rank must be int or float, got {type(rank)}")
+    if isinstance(rank, float):
+        if not 0.0 < rank <= 1.0:
+            raise ValueError(f"float rank must be in (0, 1], got {rank}")
+        return max(1, int(rank * min(m, n)))
+    if rank < 1:
+        raise ValueError(f"int rank must be >= 1, got {rank}")
+    return min(rank, min(m, n))
+
+
 def auto_fact(
     module: Module,
     rank: Rank,
@@ -83,10 +111,16 @@ def auto_fact(
     factorize_linear: bool = True,
     factorize_conv: bool = True,
     fuse: str = "auto",
+    gate: bool = True,
     return_report: bool = False,
 ):
     """Factorize a model. See module docstring. Returns the new model
-    (and a :class:`FactReport` when ``return_report=True``)."""
+    (and a :class:`FactReport` when ``return_report=True``).
+
+    ``gate=False`` disables the paper's ``r < r_max`` break-even check and
+    resolves float ranks against ``min(m, n)`` instead of ``r_max``, so
+    ``rank=1.0, solver='svd'`` yields an exact (to fp) full-rank LED —
+    useful for differential testing, never for compression."""
     solve = get_solver(solver)
     if solver == "random" and key is None:
         key = jax.random.PRNGKey(0)
@@ -114,18 +148,22 @@ def auto_fact(
                 m, n = c_in * kh * kw, c_out
             stack = []
 
-        r = resolve_rank(rank, m, n)
-        if r >= r_max(m, n):
-            report.skipped.append(
-                (path, f"rank {r} >= r_max {r_max(m, n):.1f} ({m}x{n})"))
-            return node
+        if gate:
+            r = resolve_rank(rank, m, n)
+            if r >= r_max(m, n):
+                report.skipped.append(
+                    (path, f"rank {r} >= r_max {r_max(m, n):.1f} ({m}x{n})"))
+                return node
+        else:
+            r = _resolve_ungated(rank, m, n)
 
         lkey = _layer_key(key, path) if key is not None else None
         report.params_before += node.weight.size
         if isinstance(node, Linear):
             a, b = solve(node.weight, r, key=lkey, num_iter=num_iter)
             new = LED(A=a, B=b, bias=node.bias, fuse=fuse)
-            report.entries.append((path, "linear", m, n, r))
+            report.entries.append(
+                (path, "linear", m, n, r, _rel_err(node.weight, a, b)))
         elif isinstance(node, Conv1D):
             w_mat = jnp.transpose(node.weight, (0, 2, 1)).reshape(m, n)
             a_mat, b_mat = solve(w_mat, r, key=lkey, num_iter=num_iter)
@@ -133,7 +171,8 @@ def auto_fact(
             b = b_mat[:, :, None]  # (r, Cout, 1)
             new = CED1D(A=a, B=b, bias=node.bias, stride=node.stride,
                         padding=node.padding)
-            report.entries.append((path, "conv1d", m, n, r))
+            report.entries.append(
+                (path, "conv1d", m, n, r, _rel_err(w_mat, a_mat, b_mat)))
         else:
             w_mat = jnp.transpose(node.weight, (0, 2, 3, 1)).reshape(m, n)
             a_mat, b_mat = solve(w_mat, r, key=lkey, num_iter=num_iter)
@@ -141,7 +180,8 @@ def auto_fact(
             b = b_mat[:, :, None, None]
             new = CED2D(A=a, B=b, bias=node.bias, stride=node.stride,
                         padding=node.padding)
-            report.entries.append((path, "conv2d", m, n, r))
+            report.entries.append(
+                (path, "conv2d", m, n, r, _rel_err(w_mat, a_mat, b_mat)))
         report.params_after += a.size + b.size
         return new
 

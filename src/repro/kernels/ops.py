@@ -44,9 +44,25 @@ def led_matmul(
     block_k: int = 512,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Fused ``(x @ A) @ B``. x: (..., K); a: (K, R); b: (R, N)."""
+    """Fused ``(x @ A) @ B``. x: (..., K); a: (..., K, R); b: (..., R, N).
+
+    a/b may carry matching leading stack axes (layer-scanned or
+    expert-stacked auto_fact weights); each stack slice must pair with the
+    same-index leading axis of x, and the 2D kernel is vmapped over them.
+    """
     if interpret is None:
         interpret = default_interpret()
+    if a.ndim > 2:
+        if a.shape[:-2] != b.shape[:-2]:
+            raise ValueError(
+                f"stack axes of a {a.shape} and b {b.shape} must match")
+        if x.shape[: a.ndim - 2] != a.shape[:-2]:
+            raise ValueError(
+                f"x leading axes {x.shape} must match stack axes {a.shape}")
+        return jax.vmap(
+            lambda xx, aa, bb: led_matmul(
+                xx, aa, bb, block_m=block_m, block_n=block_n,
+                block_k=block_k, interpret=interpret))(x, a, b)
     *lead, kdim = x.shape
     r = a.shape[-1]
     n = b.shape[-1]
@@ -88,6 +104,11 @@ def _led_fwd(x, a, b):
 
 def _led_bwd(res, dy):
     x, a, b = res
+    if a.ndim > 2:
+        # stacked factors: the hand-derived gradients below are 2D-only, so
+        # fall back to autodiff through the (stack-aware) jnp oracle
+        _, vjp = jax.vjp(led_matmul_ref, x, a, b)
+        return vjp(dy)
     *lead, kdim = x.shape
     m = 1
     for d in lead:

@@ -12,12 +12,16 @@ NEG_INF = -1e30  # must stay equal to repro.nn.attention.NEG_INF (see there)
 def led_matmul_ref(x: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
     """y = (x @ A) @ B with fp32 accumulation.
 
-    x: (..., K); a: (K, R); b: (R, N) -> y: (..., N) in x.dtype.
+    x: (..., K); a: (..., K, R); b: (..., R, N) -> y: (..., N) in x.dtype.
+    a/b may carry leading stack axes (the shapes auto_fact emits for
+    layer-scanned or expert-stacked weights); ``matmul`` broadcasting pairs
+    them with x's leading axes, exactly like the ``(x @ A) @ B`` the LED
+    layer computes.
     """
-    t = jnp.dot(x.astype(jnp.float32), a.astype(jnp.float32),
-                preferred_element_type=jnp.float32)
-    y = jnp.dot(t, b.astype(jnp.float32),
-                preferred_element_type=jnp.float32)
+    t = jnp.matmul(x.astype(jnp.float32), a.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    y = jnp.matmul(t, b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
     return y.astype(x.dtype)
 
 

@@ -5,7 +5,7 @@
         [--kv-layout paged --block-size 16 --decode-kernel pallas] \
         [--chunk-size 32 --buckets 8,16,32 --prefill-budget 32] \
         [--no-prefix-reuse --prefix-retain 64] [--stream] \
-        [--fact-rank 0.5 --solver svd]
+        [--factorize --rank 0.5 --solver svd] [--spec-k 4]
 
 Replays a Poisson arrival trace of variable-length prompts through the
 continuous-batching engine (``repro.serve.ContinuousEngine``): requests are
@@ -47,9 +47,21 @@ printed as SSE-style ``data:`` lines the moment they land
 (``ContinuousEngine.stream()`` / ``on_token``).
 
 Demonstrates the paper's post-training-factorization use case end-to-end —
-the dense model is factorized with SVD *after* "training" (here: at
-init), then served; tokens/s, p50/p95 latency, TTFT, HBM-resident KV
-bytes, and the admission-path profile are printed per variant.
+``--factorize`` SVD-factorizes the dense model *after* "training" (here:
+at init; rank ``--rank`` as a ratio of min(m, n), embed/lm_head kept
+dense, r_max gate off so ``--rank 1.0`` reconstructs exactly) and serves
+it through the same engine, reporting dense-vs-factorized greedy
+agreement alongside tokens/s, p50/p95 latency, TTFT, HBM-resident KV
+bytes, and the admission-path profile.  ``--fact-rank R`` is the
+deprecated spelling of ``--factorize --rank R``.
+
+``--spec-k K`` turns on **speculative decoding**: a ``--rank``-ratio
+factorized draft of the model proposes K greedy tokens per round and the
+dense model verifies them in ONE batched multi-token decode step,
+committing the agreeing prefix plus its own next token — the greedy
+output is bit-identical to plain dense decoding by construction (the
+driver asserts it), and the acceptance rate printed per run is the
+fraction of drafted tokens the verifier kept.
 """
 
 from __future__ import annotations
@@ -154,11 +166,28 @@ def main(argv=None) -> int:
     p.add_argument("--stream", action="store_true",
                    help="print tokens as SSE-style data: lines as they "
                         "land instead of batch stats")
-    p.add_argument("--fact-rank", type=float, default=0.0)
-    p.add_argument("--solver", default="svd")
+    p.add_argument("--factorize", action="store_true",
+                   help="serve the auto_fact-factorized model (rank from "
+                        "--rank, embed/lm_head excluded, r_max gate off so "
+                        "--rank 1.0 is an exact full-rank factorization) "
+                        "and report dense-vs-factorized greedy agreement")
+    p.add_argument("--rank", type=float, default=0.5,
+                   help="factorization rank as a ratio of min(m, n) per "
+                        "layer (1.0 = exact full rank)")
+    p.add_argument("--fact-rank", type=float, default=0.0,
+                   help="deprecated alias for --factorize --rank R")
+    p.add_argument("--solver", default="svd",
+                   choices=("svd", "snmf", "random"))
+    p.add_argument("--spec-k", type=int, default=0,
+                   help="speculative decoding draft depth: a rank---rank "
+                        "factorized draft proposes k tokens per round, the "
+                        "dense model verifies them in one multi-token step "
+                        "(greedy output stays bit-identical; 0 = off)")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--reduced", action="store_true")
     args = p.parse_args(argv)
+    if args.fact_rank:  # pre-PR6 spelling
+        args.factorize, args.rank = True, args.fact_rank
 
     min_prompt = 4
     if not 0 <= args.shared_prefix <= args.max_prompt_len - min_prompt:
@@ -178,6 +207,9 @@ def main(argv=None) -> int:
     if kind not in (None, "kv"):
         if args.decode_kernel == "pallas":
             p.error(f"--decode-kernel pallas needs paged attention KV; "
+                    f"{args.arch} serves via per-slot {kind!r} state")
+        if args.spec_k:
+            p.error(f"--spec-k needs a multi-token-capable KV cache; "
                     f"{args.arch} serves via per-slot {kind!r} state")
         print(f"# {args.arch}: per-slot {kind!r} state — paged layout / "
               "prefix cache knobs inactive")
@@ -205,6 +237,9 @@ def main(argv=None) -> int:
             dims["prefix_retain_blocks"] = args.prefix_retain
 
     if args.stream:
+        if args.spec_k:
+            p.error("--stream and --spec-k are mutually exclusive (the "
+                    "streaming driver replays the plain decode path)")
         n_tok = stream_trace(model, cfg, trace, **dims)
         print(f": streamed {n_tok} tokens from {args.n_requests} requests")
         return 0
@@ -214,9 +249,10 @@ def main(argv=None) -> int:
     print(format_kv_stats("dense", stats))
     print(format_prefill_stats("dense", stats))
 
-    if args.fact_rank:
-        fact, report = auto_fact(model, args.fact_rank, solver=args.solver,
+    if args.factorize:
+        fact, report = auto_fact(model, args.rank, solver=args.solver,
                                  key=jax.random.PRNGKey(1),
+                                 exclude=["embed", "lm_head"], gate=False,
                                  return_report=True)
         print(report.summary())
         fact_done, fstats = bench_trace(fact, cfg, trace, **dims)
@@ -225,6 +261,24 @@ def main(argv=None) -> int:
         print(format_prefill_stats("factorized", fstats))
         agree = greedy_agreement(dense_done, fact_done)
         print(f"greedy token agreement dense vs factorized: {agree:.1%}")
+
+    if args.spec_k:
+        # low-rank draft + dense verify: same greedy tokens, fewer rounds
+        draft = auto_fact(model, args.rank, solver=args.solver,
+                          key=jax.random.PRNGKey(1),
+                          exclude=["embed", "lm_head"], gate=False)
+        spec_done, sstats = bench_trace(model, cfg, trace, **dims,
+                                        draft_model=draft,
+                                        spec_k=args.spec_k)
+        print(format_stats("speculative", sstats))
+        print(f"speculative decode: k={sstats['spec_k']} "
+              f"rounds={sstats['spec_rounds']} "
+              f"accepted {sstats['spec_accepted_tokens']}"
+              f"/{sstats['spec_drafted_tokens']} drafted "
+              f"({sstats['spec_acceptance_rate']:.1%})")
+        agree = greedy_agreement(dense_done, spec_done)
+        print(f"greedy token agreement dense vs speculative: {agree:.1%}")
+        assert agree == 1.0, "speculative decoding must be bit-exact"
     return 0
 
 

@@ -316,7 +316,13 @@ class TransformerLM(Module):
 
     def decode(self, token: jax.Array, cache, *,
                decode_kernel: str = "reference"):
-        """token: (batch, 1) -> logits (batch, 1, vocab) + updated cache.
+        """token: (batch, s) -> logits (batch, s, vocab) + updated cache.
+
+        ``s == 1`` is the ordinary autoregressive step; ``s > 1`` is the
+        multi-token step speculative verification uses (position ``j``
+        attends rows ``<= pos + j``, so the logits equal a sequential
+        ``s``-step decode's — see :meth:`repro.nn.attention.Attention.
+        decode`).
 
         Accepts a dense :class:`KVCache` or a :class:`PagedKVCache`; for the
         paged layout the block table is shared across layers, so only the

@@ -394,7 +394,17 @@ class Attention(Module):
 
     def decode(self, x: jax.Array, cache, *,
                decode_kernel: str = "reference") -> tuple[jax.Array, "KVCache"]:
-        """One-token decode step. x: (batch, 1, dim).
+        """Decode step for ``s`` new tokens per row. x: (batch, s, dim).
+
+        ``s == 1`` is the ordinary autoregressive step.  ``s > 1`` is the
+        multi-token step speculative verification uses: all ``s`` K/V rows
+        are written first, then every query attends under a ``kpos <=
+        qpos`` mask, so token ``j`` sees exactly the rows a sequential
+        ``s``-step decode would have seen (intra-chunk causality) and the
+        logits match the sequential ones bit-for-bit given the same cache
+        contents.  Rows past the accepted prefix are overwritten by the
+        next step before any query can attend them (length only advances
+        by the accepted count).
 
         With a :class:`KVCache`, ``cache.length`` is either a scalar
         (lock-step batch: every row sits at the same position) or a
@@ -404,18 +414,24 @@ class Attention(Module):
         are scattered to / gathered from the shared block pool through each
         slot's block table; ``decode_kernel`` selects the paged attention
         implementation (``"reference"`` = dense gather + masked softmax,
-        ``"pallas"`` = the fused block-streaming kernel) and is ignored for
-        dense caches."""
+        ``"pallas"`` = the fused block-streaming kernel, single-token steps
+        only — multi-token steps fall back to the reference gather) and is
+        ignored for dense caches."""
         if isinstance(cache, PagedKVCache):
             return self._decode_paged(x, cache, kernel=decode_kernel)
-        b = x.shape[0]
+        b, s, _ = x.shape
         pos = cache.length
         per_slot = pos.ndim == 1
-        positions = (pos[:, None].astype(jnp.int32) if per_slot
-                     else jnp.full((b, 1), pos, dtype=jnp.int32))
-        q, k, v = self._qkv(x, positions=positions, kv_positions=positions)
-        k, v = k.astype(cache.k.dtype), v.astype(cache.v.dtype)
         if self._is_ring(cache):
+            if s != 1:
+                raise NotImplementedError(
+                    "multi-token decode targets the kv/paged layouts; "
+                    "ring-buffer (sliding-window) caches decode one token "
+                    "at a time")
+            positions = (pos[:, None].astype(jnp.int32) if per_slot
+                         else jnp.full((b, 1), pos, dtype=jnp.int32))
+            q, k, v = self._qkv(x, positions=positions, kv_positions=positions)
+            k, v = k.astype(cache.k.dtype), v.astype(cache.v.dtype)
             w = self.window
             slot = pos % w
             i = jnp.arange(w)
@@ -425,6 +441,7 @@ class Attention(Module):
                 new_v = cache.v.at[rows, slot].set(v[:, 0])
                 kpos = pos[:, None] - jnp.mod(pos[:, None] - i[None, :], w)
                 valid = kpos >= 0  # (b, w)
+                mask = valid[:, None, None, :]
             else:
                 new_k = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
                 new_v = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
@@ -432,56 +449,75 @@ class Attention(Module):
                 # once non-negative.  Window recency holds by construction.
                 kpos = pos - jnp.mod(pos - i, w)
                 valid = kpos >= 0
+                mask = valid[None, None, None, :]
+            out = self._attend(q, new_k.astype(x.dtype),
+                               new_v.astype(x.dtype), mask)
+            return self.o_proj(out), KVCache(new_k, new_v, pos + 1)
+        kpos = jnp.arange(cache.k.shape[1])
+        if per_slot:
+            qpos = pos[:, None] + jnp.arange(s)[None, :]  # (b, s)
+            q, k, v = self._qkv(x, positions=qpos.astype(jnp.int32),
+                                kv_positions=qpos.astype(jnp.int32))
+            k, v = k.astype(cache.k.dtype), v.astype(cache.v.dtype)
+            # mode='drop': a row parked at pos == max_len (slot frozen by
+            # cache_full eviction, or mid-chunked-prefill with its write
+            # frontier owned by prefill_chunk) must write NOWHERE — the
+            # default clip would smear stale K/V into the last lane row
+            rows = jnp.arange(b)
+            new_k = cache.k.at[rows[:, None], qpos].set(k, mode="drop")
+            new_v = cache.v.at[rows[:, None], qpos].set(v, mode="drop")
+            valid = kpos[None, None, :] <= qpos[:, :, None]  # (b, s, S)
+            if self.window > 0:
+                valid = valid & (kpos[None, None, :]
+                                 > qpos[:, :, None] - self.window)
+            mask = valid[:, None]  # (b, 1, s, S)
         else:
-            kpos = jnp.arange(cache.k.shape[1])
-            if per_slot:
-                # mode='drop': a row parked at pos == max_len (slot frozen by
-                # cache_full eviction, or mid-chunked-prefill with its write
-                # frontier owned by prefill_chunk) must write NOWHERE — the
-                # default clip would smear stale K/V into the last lane row
-                rows = jnp.arange(b)
-                new_k = cache.k.at[rows, pos].set(k[:, 0], mode="drop")
-                new_v = cache.v.at[rows, pos].set(v[:, 0], mode="drop")
-                valid = kpos[None, :] <= pos[:, None]
-                if self.window > 0:
-                    valid = valid & (kpos[None, :] > pos[:, None] - self.window)
-            else:
-                new_k = jax.lax.dynamic_update_slice(cache.k, k, (0, pos, 0, 0))
-                new_v = jax.lax.dynamic_update_slice(cache.v, v, (0, pos, 0, 0))
-                valid = kpos <= pos
-                if self.window > 0:
-                    valid = valid & (kpos > pos - self.window)
-        mask = valid[:, None, None, :] if per_slot else valid[None, None, None, :]
+            qpos = pos + jnp.arange(s)  # (s,)
+            positions = jnp.broadcast_to(qpos[None, :], (b, s)).astype(jnp.int32)
+            q, k, v = self._qkv(x, positions=positions, kv_positions=positions)
+            k, v = k.astype(cache.k.dtype), v.astype(cache.v.dtype)
+            new_k = jax.lax.dynamic_update_slice(cache.k, k, (0, pos, 0, 0))
+            new_v = jax.lax.dynamic_update_slice(cache.v, v, (0, pos, 0, 0))
+            valid = kpos[None, :] <= qpos[:, None]  # (s, S)
+            if self.window > 0:
+                valid = valid & (kpos[None, :] > qpos[:, None] - self.window)
+            mask = valid[None, None]  # (1, 1, s, S)
         out = self._attend(q, new_k.astype(x.dtype), new_v.astype(x.dtype), mask)
-        return self.o_proj(out), KVCache(new_k, new_v, pos + 1)
+        return self.o_proj(out), KVCache(new_k, new_v, pos + s)
 
     def _decode_paged(self, x: jax.Array, cache: PagedKVCache,
                       kernel: str = "reference"
                       ) -> tuple[jax.Array, PagedKVCache]:
-        """One-token decode against the shared block pool.
+        """Decode ``s`` tokens per slot against the shared block pool.
 
-        The new K/V row is scattered to ``table[b, pos // bs] * bs +
-        pos % bs`` (``mode='drop'``: slots whose table entry is the
-        unmapped sentinel — finished or never admitted — write nowhere, so
-        a frozen slot can never clobber a block recycled to another
-        request).  ``kernel="reference"`` (the dense-gather baseline) then
-        gathers every mapped pool row back into logical order and masks
-        ``kpos > pos``; gathers through sentinel entries clip into masked
-        lanes, and exactly-NEG_INF masking makes their contribution a hard
-        zero, keeping outputs bit-identical to the dense per-slot layout.
-        ``kernel="pallas"`` replaces the gather + attention with the fused
+        Each new K/V row is scattered to ``table[b, p // bs] * bs +
+        p % bs`` for ``p = pos .. pos + s - 1`` (``mode='drop'``: slots
+        whose table entry is the unmapped sentinel — finished, never
+        admitted, or positions past the slot's block reservation — write
+        nowhere, so a frozen slot can never clobber a block recycled to
+        another request).  ``kernel="reference"`` (the dense-gather
+        baseline) then gathers every mapped pool row back into logical
+        order and masks ``kpos > qpos`` per query; gathers through
+        sentinel entries clip into masked lanes, and exactly-NEG_INF
+        masking makes their contribution a hard zero, keeping outputs
+        bit-identical to the dense per-slot layout.  ``kernel="pallas"``
+        replaces the gather + attention with the fused
         :func:`repro.kernels.paged_attention` kernel — blocks stream
         through VMEM inside a flash-style online-softmax loop and the
         dense ``(batch, max_len, kvh, hd)`` view is never materialized
-        (sentinel and ``kpos > pos`` masking move in-kernel)."""
+        (sentinel and ``kpos > pos`` masking move in-kernel).  The kernel
+        is single-query; multi-token steps (``s > 1``, the speculative
+        verify pass) fall back to the reference gather."""
         if self.window > 0:
             raise NotImplementedError(
                 "paged decode supports global attention only; sliding-window "
                 "layers use the ring-buffer KVCache path")
         if kernel not in ("reference", "pallas"):
             raise ValueError(f"unknown paged decode kernel {kernel!r}")
+        b, s, _ = x.shape
         pos = cache.length  # (b,)
-        positions = pos[:, None].astype(jnp.int32)
+        qpos = pos[:, None] + jnp.arange(s)[None, :]  # (b, s)
+        positions = qpos.astype(jnp.int32)
         q, k, v = self._qkv(x, positions=positions, kv_positions=positions)
         nb, bs, kvh, hd = cache.k.shape
         max_table = cache.table.shape[1]
@@ -492,20 +528,16 @@ class Attention(Module):
         # the sentinel row explicitly — take_along_axis's out-of-bounds fill
         # (INT32_MIN) times bs wraps around int32 to a VALID row otherwise
         blk = jnp.take_along_axis(
-            cache.table, jnp.minimum(pos // bs, max_table - 1)[:, None],
-            axis=1)[:, 0]
-        row_new = jnp.where(pos < max_table * bs, blk * bs + pos % bs,
-                            nb * bs)  # (b,) flat pool row for this token
-        pool_k = pool_k.at[row_new].set(k[:, 0].astype(pool_k.dtype),
-                                        mode="drop")
-        pool_v = pool_v.at[row_new].set(v[:, 0].astype(pool_v.dtype),
-                                        mode="drop")
+            cache.table, jnp.minimum(qpos // bs, max_table - 1), axis=1)
+        row_new = jnp.where(qpos < max_table * bs, blk * bs + qpos % bs,
+                            nb * bs)  # (b, s) flat pool rows for these tokens
+        pool_k = pool_k.at[row_new].set(k.astype(pool_k.dtype), mode="drop")
+        pool_v = pool_v.at[row_new].set(v.astype(pool_v.dtype), mode="drop")
         new_k = pool_k.reshape(nb, bs, kvh, hd)
         new_v = pool_v.reshape(nb, bs, kvh, hd)
-        if kernel == "pallas":
+        if kernel == "pallas" and s == 1:
             from repro.kernels.paged_attention import paged_attention
 
-            b = x.shape[0]
             out = paged_attention(q[:, 0], new_k, new_v, cache.table, pos)
             out = out.reshape(b, 1, self.num_heads * self.head_dim)
         else:
@@ -513,7 +545,7 @@ class Attention(Module):
             rows = cache.table[:, kpos // bs] * bs + (kpos % bs)[None, :]
             gk = pool_k[rows].astype(x.dtype)  # (b, max_table*bs, kvh, hd)
             gv = pool_v[rows].astype(x.dtype)
-            valid = kpos[None, :] <= pos[:, None]
-            out = self._attend(q, gk, gv, valid[:, None, None, :])
+            valid = kpos[None, None, :] <= qpos[:, :, None]  # (b, s, S)
+            out = self._attend(q, gk, gv, valid[:, None])
         return self.o_proj(out), PagedKVCache(new_k, new_v, cache.table,
-                                              pos + 1)
+                                              pos + s)

@@ -8,7 +8,10 @@ consumes the *last two* axes.
 ``LED`` (Linear Encoder-Decoder) is the paper's factorized replacement:
 ``y = (x @ A) @ B + b`` with ``A: (in, r)`` and ``B: (r, out)``.  When
 ``fuse='pallas'`` the forward uses the fused Pallas TPU kernel from
-``repro.kernels`` that keeps the rank-``r`` intermediate in VMEM.
+``repro.kernels`` that keeps the rank-``r`` intermediate in VMEM;
+``fuse='auto'`` picks the kernel on TPU and the plain jnp matmuls
+elsewhere (off-TPU the kernel only runs interpreted — correct but slow,
+so 'auto' never selects it there).
 """
 
 from __future__ import annotations
@@ -81,7 +84,8 @@ class LED(Module):
         return LED(A=A, B=B, bias=bias)
 
     def __call__(self, x: jax.Array) -> jax.Array:
-        if self.fuse == "pallas":
+        if self.fuse == "pallas" or (self.fuse == "auto"
+                                     and jax.default_backend() == "tpu"):
             from repro.kernels.ops import led_matmul_trainable
 
             y = led_matmul_trainable(x, self.A, self.B)

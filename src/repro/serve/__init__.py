@@ -32,7 +32,12 @@ Five modules:
   :func:`repro.kernels.paged_attention` kernel (KV blocks stream through
   VMEM inside an online-softmax loop; greedy tokens bit-identical to the
   ``"reference"`` dense-gather path).  ``stream()`` / ``on_token`` yield
-  tokens as they land.
+  tokens as they land.  ``draft_model``/``spec_k`` turn on greedy
+  **speculative decoding**: a low-rank ``auto_fact`` draft proposes
+  ``spec_k`` tokens per round and the dense model verifies them in one
+  multi-token decode step — output bit-identical to plain greedy by
+  construction, acceptance rate in ``spec_stats()`` (see ``README.md``
+  §Factorized serving & speculative decoding).
 * ``repro.serve.paging`` — host block bookkeeping.  Refcounted
   ``BlockAllocator`` over the pool, ``PrefixCache`` keyed by sha256
   hash-chains over *full* prompt blocks (``key_i = sha256(key_{i-1} ||

@@ -198,6 +198,21 @@ class ContinuousEngine:
     without a probe (whisper enc-dec) are rejected with a structured
     :class:`UnsupportedCacheError` naming the remaining ROADMAP item.
 
+    **Speculative decoding** (``draft_model`` + ``spec_k``).  The paper's
+    low-rank factorized model (``auto_fact``) drafts ``spec_k`` tokens
+    greedily with cheap single-token steps, then the dense model verifies
+    all of them in ONE multi-token decode step (k queries under a ``kpos
+    <= qpos`` mask — see :meth:`repro.nn.attention.Attention.decode`) and
+    the agreeing prefix plus one correction token is emitted.  Every
+    emitted token is an argmax of DENSE logits conditioned on previously
+    emitted tokens, so greedy output is bit-identical to the plain dense
+    engine by construction — the draft quality only moves the acceptance
+    rate (speed), never the tokens.  The draft keeps its own cache
+    mirroring the verifier's layout (same block tables when paged); both
+    length frontiers advance together by the accepted count, and rows past
+    the frontier are rewritten before they can be attended.  Greedy-only:
+    ``submit`` rejects ``temperature != 0`` when speculation is on.
+
     Streaming: ``stream()`` yields ``(uid, token, completion|None)`` as
     tokens land, and ``on_token`` (callable ``(uid, token)``) fires inside
     ``step()`` for push-style consumers.
@@ -213,7 +228,8 @@ class ContinuousEngine:
                  buckets: Optional[Sequence[int]] = None,
                  prefill_chunk_budget: Optional[int] = None,
                  prefix_reuse: bool = True,
-                 prefix_retain_blocks: Optional[int] = None):
+                 prefix_retain_blocks: Optional[int] = None,
+                 draft_model=None, spec_k: int = 0):
         probe = getattr(model, "cache_kind", None)
         if probe is None:
             raise UnsupportedCacheError(
@@ -227,6 +243,23 @@ class ContinuousEngine:
             raise UnsupportedCacheError(
                 f"{type(model).__name__} reports unknown cache kind "
                 f"{self.cache_kind!r}")
+        if (draft_model is None) != (spec_k == 0):
+            raise ValueError(
+                "speculative decoding needs BOTH draft_model and spec_k >= 1 "
+                "(or neither)")
+        if spec_k < 0:
+            raise ValueError("need spec_k >= 0")
+        if draft_model is not None:
+            dprobe = getattr(draft_model, "cache_kind", None)
+            if (self.cache_kind != "kv" or dprobe is None
+                    or dprobe(cfg) != "kv"):
+                raise UnsupportedCacheError(
+                    "speculative decoding requires the 'kv' cache kind for "
+                    "both verifier and draft (multi-token verification needs "
+                    "position-addressable KV lanes; ring/ssm/hybrid state "
+                    "advances one token at a time)")
+        self.spec_k = spec_k
+        self.draft_model = draft_model
         if not 0 < max_prompt_len < max_len:
             raise ValueError("need 0 < max_prompt_len < max_len")
         if kv_layout not in ("paged", "dense"):
@@ -308,6 +341,19 @@ class ContinuousEngine:
                     "enc-dec caches (encoder K/V + cross-attention lanes)")
             self.manager = None
             self._park_pos = max_len
+        if draft_model is not None:
+            # the draft mirrors the verifier's cache layout; when paged it
+            # shares the SAME block tables (one allocation drives both
+            # pools), so reservation/refcount bookkeeping stays single
+            if kv_layout == "paged":
+                self.draft_cache = draft_model.init_paged_cache(
+                    batch, max_len, cfg, n_blocks=self.n_blocks,
+                    block_size=block_size, dtype=cache_dtype)
+            else:
+                self.draft_cache = draft_model.init_cache(
+                    batch, max_len, cfg, dtype=cache_dtype, per_slot=True)
+        else:
+            self.draft_cache = None
         self.state = _SlotArrays(
             tok=jnp.zeros((batch,), jnp.int32),
             active=jnp.zeros((batch,), bool),
@@ -333,13 +379,31 @@ class ContinuousEngine:
         self._prefix_skipped_tokens = 0    # prompt tokens never recomputed
         self._prefill_chunks = 0
         self._max_step_prefill_tokens = 0
+        self._spec_rounds = 0
+        self._spec_drafted = 0
+        self._spec_accepted = 0
 
-        def chunk_fn(need_logits, toks, cache, slot, offset, n_valid,
-                     dst=None):
-            kw = {} if dst is None else {"dst": dst}
-            return model.prefill_chunk(toks, cache, slot=slot, offset=offset,
-                                       n_valid=n_valid,
-                                       need_logits=need_logits, **kw)
+        if draft_model is None:
+            def chunk_fn(need_logits, toks, cache, slot, offset, n_valid,
+                         dst=None):
+                kw = {} if dst is None else {"dst": dst}
+                return model.prefill_chunk(toks, cache, slot=slot,
+                                           offset=offset, n_valid=n_valid,
+                                           need_logits=need_logits, **kw)
+        else:
+            # the draft prefills the same chunk into its own cache (logits
+            # never needed — the verifier's final chunk seeds the first
+            # sample; the draft only ever decodes)
+            def chunk_fn(need_logits, toks, cache, dcache, slot, offset,
+                         n_valid, dst=None):
+                kw = {} if dst is None else {"dst": dst}
+                logits, cache = model.prefill_chunk(
+                    toks, cache, slot=slot, offset=offset, n_valid=n_valid,
+                    need_logits=need_logits, **kw)
+                _, dcache = draft_model.prefill_chunk(
+                    toks, dcache, slot=slot, offset=offset, n_valid=n_valid,
+                    need_logits=False, **kw)
+                return logits, cache, dcache
 
         def bind_fn(state, slot, logits, length, temp, max_new, stop_row,
                     key):
@@ -363,8 +427,13 @@ class ContinuousEngine:
 
             def model_decode(tok, cache):
                 return model.decode(tok, cache, decode_kernel=dk)
+
+            def draft_decode(tok, dcache):
+                return draft_model.decode(tok, dcache, decode_kernel=dk)
         else:
             model_decode = model.decode
+            draft_decode = (draft_model.decode if draft_model is not None
+                            else None)
 
         stateful = self.cache_kind != "kv"
 
@@ -396,16 +465,95 @@ class ContinuousEngine:
                                    n_gen=n_gen)
             return new_cache, state, nxt, done
 
+        def spec_draft_fn(dcache, vlen, state):
+            """Draft ``spec_k`` greedy tokens per slot with the factorized
+            model (cheap single-token steps).  The draft frontier is synced
+            from the VERIFIER's length ``vlen`` at entry — the verifier's
+            counter is the single source of truth for committed positions,
+            so the draft cache needs no bookkeeping of its own (and the two
+            caches never share a length buffer, which donation forbids).
+            Inactive slots run parked: their writes drop and their drafted
+            tokens are frozen to ``state.tok``."""
+            dcache = dcache._replace(length=vlen)
+
+            def body(carry, _):
+                tok, dc = carry
+                logits, dc = draft_decode(tok[:, None], dc)
+                nxt = greedy_tokens(logits[:, 0])
+                nxt = jnp.where(state.active, nxt, tok)
+                return (nxt, dc), nxt
+
+            (_, dcache), drafts = jax.lax.scan(
+                body, (state.tok, dcache), None, length=spec_k)
+            return dcache, drafts.T  # (B, k)
+
+        def spec_verify_fn(cache, state, drafts):
+            """Verify ``spec_k`` drafted tokens in ONE dense multi-token
+            decode and commit the agreeing prefix + one correction token.
+
+            Inputs ``X = [tok, d_1 .. d_{k-1}]`` decode at positions
+            ``pos0 .. pos0+k-1``; ``g_j = argmax`` of the dense logits at
+            position ``pos0+j`` is what sequential greedy would emit after
+            ``X_0..X_j``, so drafts verify via ``d_{j+1} == g_j`` and the
+            emitted tokens are ALWAYS ``g_0..g_{m-1}`` — dense argmaxes
+            conditioned on accepted context, bit-exact to plain greedy no
+            matter what the draft produced.  The frontier lands at
+            ``pos0 + m``; rows past that hold unaccepted writes the next
+            round rewrites before any query can attend them."""
+            k = spec_k
+            pos0 = cache.length[0]  # (B,) pre-decode frontier, all layers ==
+            inp = jnp.concatenate([state.tok[:, None], drafts[:, :-1]],
+                                  axis=1)
+            logits, cache = model_decode(inp, cache)
+            g = greedy_tokens(logits)  # (B, k)
+            lead = jnp.cumprod((drafts == g).astype(jnp.int32), axis=1)
+            n_match = lead.sum(axis=1)  # leading drafts that verified
+            m0 = jnp.minimum(n_match + 1, k)  # + one correction token
+            j = jnp.arange(k)
+            # per-token stop conditions, mirroring decode_fn's done logic
+            stop_hit = jnp.any(g[:, :, None] == state.stop_ids[:, None, :],
+                               axis=-1)
+            done_at = (stop_hit
+                       | (state.n_gen[:, None] + j[None, :] + 1
+                          >= state.max_new[:, None])
+                       | (pos0[:, None] + j[None, :] + 1 >= max_len))
+            d32 = done_at.astype(jnp.int32)
+            prior_done = jnp.cumsum(d32, axis=1) - d32
+            emit = ((j[None, :] < m0[:, None]) & (prior_done == 0)
+                    & state.active[:, None])
+            m = emit.sum(axis=1)  # (B,) tokens actually emitted
+            done = jnp.any(done_at & emit, axis=1)
+            new_tok = jnp.take_along_axis(
+                g, jnp.maximum(m - 1, 0)[:, None], axis=1)[:, 0]
+            new_tok = jnp.where(state.active, new_tok, state.tok)
+            # frontier = pos0 + m for live slots; parked/frozen slots get
+            # their pre-decode value back (the multi-token step advanced
+            # every row's counter by k)
+            new_len = jnp.broadcast_to(
+                jnp.where(state.active, pos0 + m, pos0)[None, :],
+                cache.length.shape)
+            cache = cache._replace(length=new_len)
+            n_gen = state.n_gen + jnp.where(state.active, m, 0)
+            n_acc = jnp.where(state.active, jnp.minimum(n_match, m), 0)
+            state = state._replace(tok=new_tok,
+                                   active=state.active & ~done, n_gen=n_gen)
+            return cache, state, g, m, n_acc, done
+
         # ONE jit per role; the chunk jits specialize per bucket width (the
         # buckets bound how many widths ever occur).  Mid-prompt chunks use
         # the logits-free variant — only a prompt's FINAL chunk pays the
         # final-norm + vocab-projection matmul
+        chunk_donate = (1,) if draft_model is None else (1, 2)
         self._chunk_last = jax.jit(
-            lambda *a: chunk_fn(True, *a), donate_argnums=(1,))
+            lambda *a: chunk_fn(True, *a), donate_argnums=chunk_donate)
         self._chunk_mid = jax.jit(
-            lambda *a: chunk_fn(False, *a), donate_argnums=(1,))
+            lambda *a: chunk_fn(False, *a), donate_argnums=chunk_donate)
         self._bind = jax.jit(bind_fn, donate_argnums=(0,))
         self._decode = jax.jit(decode_fn, donate_argnums=(0, 1))
+        if draft_model is not None:
+            self._spec_draft = jax.jit(spec_draft_fn, donate_argnums=(0,))
+            self._spec_verify = jax.jit(spec_verify_fn,
+                                        donate_argnums=(0, 1))
 
     # -- request intake ------------------------------------------------------
 
@@ -431,6 +579,11 @@ class ContinuousEngine:
                 f"{self.max_prompt_len}")
         if len(req.stop_ids) > self.max_stop_ids:
             raise ValueError(f"more than {self.max_stop_ids} stop ids")
+        if self.spec_k and req.temperature != 0.0:
+            raise ValueError(
+                "speculative decoding is greedy-only: the accepted-prefix "
+                "argument needs deterministic argmax on both models "
+                "(temperature must be 0)")
         if self.manager is not None:
             need = self.manager.blocks_needed(self._total_tokens(req))
             if need > self.n_blocks:
@@ -473,6 +626,11 @@ class ContinuousEngine:
         if self.manager is not None and self._table_dirty:
             self.cache = self.cache._replace(
                 table=jnp.asarray(self.manager.tables))
+            if self.draft_cache is not None:
+                # materialized separately on purpose: the two caches must
+                # never share a device buffer (both are donated to jits)
+                self.draft_cache = self.draft_cache._replace(
+                    table=jnp.asarray(self.manager.tables))
             self._table_dirty = False
 
     def _emit(self, uid: int, token: int) -> None:
@@ -512,6 +670,10 @@ class ContinuousEngine:
         # paged layout, INSIDE a shared prefix block it just mapped
         self.cache = self.cache._replace(
             length=self.cache.length.at[:, slot].set(self._park_pos))
+        if self.draft_cache is not None:
+            self.draft_cache = self.draft_cache._replace(
+                length=self.draft_cache.length.at[:, slot].set(
+                    self._park_pos))
 
     def _chunk_extent(self, task: _PrefillTask) -> Tuple[int, int]:
         """(true length, padded bucket width) of the task's next chunk —
@@ -527,16 +689,22 @@ class ContinuousEngine:
         toks[0, :l] = task.req.prompt[task.consumed:task.consumed + l]
         final = task.consumed + l >= task.plen
         run = self._chunk_last if final else self._chunk_mid
-        args = (jnp.asarray(toks), self.cache,
+        caches = ((self.cache,) if self.draft_cache is None
+                  else (self.cache, self.draft_cache))
+        args = (jnp.asarray(toks), *caches,
                 jnp.asarray(task.slot, jnp.int32),
                 jnp.asarray(task.consumed, jnp.int32),
                 jnp.asarray(l, jnp.int32))
         if self.manager is not None:
             dst = self.manager.scatter_rows(task.slot, task.consumed, w,
                                             lo=task.cached, hi=task.plen)
-            logits, self.cache = run(*args, jnp.asarray(dst))
+            out = run(*args, jnp.asarray(dst))
         else:
-            logits, self.cache = run(*args)
+            out = run(*args)
+        if self.draft_cache is None:
+            logits, self.cache = out
+        else:
+            logits, self.cache, self.draft_cache = out
         if final:
             task.logits = logits
         task.consumed += l
@@ -618,7 +786,26 @@ class ContinuousEngine:
                 self._max_step_prefill_tokens, prefill_spent)
 
         running = self.scheduler.running_slots()
-        if running:
+        if running and self.spec_k:
+            self._flush_table()
+            self.draft_cache, drafts = self._spec_draft(
+                self.draft_cache, self.cache.length, self.state)
+            self.cache, self.state, g, m, n_acc, done = self._spec_verify(
+                self.cache, self.state, drafts)
+            g_np, m_np = np.asarray(g), np.asarray(m)
+            done_np = np.asarray(done)
+            pos_np = np.asarray(self.cache.length[0])
+            self._spec_rounds += 1
+            self._spec_drafted += self.spec_k * len(running)
+            self._spec_accepted += int(np.asarray(n_acc).sum())
+            for slot in running:
+                uid = self.scheduler.slots[slot].request.uid
+                for tok in g_np[slot, :m_np[slot]]:
+                    self.scheduler.append_token(slot, tok)
+                    self._emit(uid, tok)
+                if done_np[slot]:
+                    finished.append(self._finish(slot, int(pos_np[slot])))
+        elif running:
             self._flush_table()
             self.cache, self.state, nxt, done = self._decode(
                 self.cache, self.state, self._next_key())
@@ -700,6 +887,22 @@ class ContinuousEngine:
             "max_step_prefill_tokens": self._max_step_prefill_tokens,
         }
 
+    def spec_stats(self) -> dict:
+        """Speculative-decoding accounting.  ``spec_acceptance_rate`` =
+        accepted drafted tokens / drafted tokens; the correction token each
+        round emits on top of the accepted prefix is not a draft and counts
+        in neither number (so rate 1.0 means every draft verified and each
+        round advanced ``spec_k`` tokens per slot)."""
+        drafted = self._spec_drafted
+        return {
+            "spec_k": self.spec_k,
+            "spec_rounds": self._spec_rounds,
+            "spec_drafted_tokens": drafted,
+            "spec_accepted_tokens": self._spec_accepted,
+            "spec_acceptance_rate": (self._spec_accepted / drafted
+                                     if drafted else 0.0),
+        }
+
     def reset_stats(self) -> None:
         """Zero the prefill/step accounting (e.g. after a compile warmup)
         without touching the serving state.  The KV peak rebases to the
@@ -712,6 +915,9 @@ class ContinuousEngine:
         self._prefix_skipped_tokens = 0
         self._prefill_chunks = 0
         self._max_step_prefill_tokens = 0
+        self._spec_rounds = 0
+        self._spec_drafted = 0
+        self._spec_accepted = 0
         if self.manager is not None:
             self.manager.prefix_hit_tokens = 0
             a = self.manager.allocator

@@ -144,6 +144,8 @@ def bench_trace(model, cfg, trace: List[Tuple[float, Request]], *,
     stats.update(engine.kv_stats())
     stats.update(engine.prefill_stats())
     stats.update(stall_stats(engine.step_log))
+    if engine.spec_k:
+        stats.update(engine.spec_stats())
     return completions, stats
 
 

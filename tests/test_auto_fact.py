@@ -222,10 +222,10 @@ def test_report_param_counts_match_pytree(key):
                           exclude=["embed", "lm_head"], return_report=True)
     assert rep.params_before - rep.params_after == \
         _factored_param_delta(model, fact)
-    # entries carry per-layer (m, n, r); params_* count the whole
+    # entries carry per-layer (m, n, r, rel_err); params_* count the whole
     # layer-stacked weights, hence the n_layers factor
-    led_after = sum(r * (m + n) for _, kind, m, n, r in rep.entries)
-    dense_before = sum(m * n for _, kind, m, n, r in rep.entries)
+    led_after = sum(r * (m + n) for _, kind, m, n, r, _e in rep.entries)
+    dense_before = sum(m * n for _, kind, m, n, r, _e in rep.entries)
     assert rep.params_after == cfg.n_layers * led_after
     assert rep.params_before == cfg.n_layers * dense_before
     assert rep.compression == rep.params_before / rep.params_after
@@ -269,3 +269,70 @@ def test_report_exclude_filter_reflected(attn):
     assert {e[0] for e in rep.entries} == {"q_proj", "k_proj", "v_proj"}
     assert [p for p, why in rep.skipped] == ["o_proj"]
     assert rep.params_before == 64 * 64 + 2 * 64 * 32  # o_proj not counted
+
+
+# ---- compression edge cases & per-layer reconstruction error ----------------
+
+
+def test_empty_report_compression_is_one():
+    """Nothing factorized → 1.0x compression, not a ZeroDivisionError."""
+    rep = FactReport()
+    assert rep.compression == 1.0
+    assert "0 layers factorized" in rep.summary()
+
+
+def test_all_skipped_report_compression_is_one(attn):
+    """Every layer gated off (rank >= r_max everywhere): the report must
+    still render and report no compression."""
+    _, rep = auto_fact(attn, rank=32, return_report=True)
+    assert not rep.entries and len(rep.skipped) == 4
+    assert rep.params_after == 0 and rep.compression == 1.0
+    assert "4 skipped" in rep.summary()
+
+
+def test_entries_carry_rel_err(attn):
+    """Each entry's 6th field is the relative Frobenius reconstruction
+    error; SVD at a given rank is optimal, so it never exceeds the
+    random solver's error on the same layer."""
+    _, rs = auto_fact(attn, rank=8, solver="svd", return_report=True)
+    _, rr = auto_fact(attn, rank=8, solver="random", return_report=True)
+    svd = {e[0]: e[5] for e in rs.entries}
+    rnd = {e[0]: e[5] for e in rr.entries}
+    assert svd.keys() == rnd.keys() == {"q_proj", "k_proj", "v_proj",
+                                        "o_proj"}
+    for path, err in svd.items():
+        assert 0.0 <= err <= 1.5
+        assert err <= rnd[path] + 1e-6, path
+    assert "rel_err=" in rs.summary()
+
+
+def test_gate_false_full_rank_is_exact(attn, key):
+    """gate=False + rank=1.0: every Linear becomes an exact full-rank
+    LED (r = min(m, n), rel_err ~ 0) even though r >= r_max would
+    normally skip it — the knob serving uses to isolate routing bugs
+    from truncation error."""
+    fact, rep = auto_fact(attn, rank=1.0, solver="svd", gate=False,
+                          return_report=True)
+    assert len(rep.entries) == 4 and not rep.skipped
+    for path, kind, m, n, r, err in rep.entries:
+        assert r == min(m, n)
+        assert err < 1e-5, f"{path}: {err}"
+    x = jax.random.normal(key, (2, 6, 64))
+    np.testing.assert_allclose(np.asarray(fact(x)), np.asarray(attn(x)),
+                               atol=1e-4, rtol=1e-4)
+    # full-rank LED costs MORE params than dense — the report says so
+    assert rep.compression < 1.0
+
+
+def test_gate_false_int_rank_clamped(attn):
+    """gate=False with an oversized int rank clamps to min(m, n) instead
+    of erroring or inflating beyond full rank."""
+    fact, rep = auto_fact(attn, rank=4096, solver="svd", gate=False,
+                          return_report=True)
+    for _, _, m, n, r, _err in rep.entries:
+        assert r == min(m, n)
+
+
+def test_gate_false_rejects_bool_rank(attn):
+    with pytest.raises(TypeError):
+        auto_fact(attn, rank=True, gate=False)

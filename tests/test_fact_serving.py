@@ -1,0 +1,224 @@
+"""Dense-vs-factorized differential serving matrix.
+
+The paper's toolkit factorizes a model; PRs 1-5 built the serving stack.
+This file proves the two compose: a factorized TransformerLM served
+through the ContinuousEngine must (a) be *exact* at full rank — the SVD
+path reconstructs W = A @ B to float tolerance, so the old 3% greedy
+agreement was never a serving bug — and (b) degrade gracefully with
+rank on a model whose spectra actually decay (random init has a flat
+Marchenko-Pastur spectrum, so truncation there destroys the logits;
+``spectral_decay`` shapes the fixture into the trained-network regime
+the paper's compression results live in).
+
+Matrix: solver in {svd, snmf, random} x rank ratio in {0.25, 0.5,
+full-rank-equivalent}, each cell served end-to-end through the engine,
+with agreement/exactness asserted on the SVD column and per-layer
+reconstruction-error bounds asserted from the FactReport.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import auto_fact, spectral_decay
+from repro.models import build_model
+from repro.serve import ContinuousEngine, generate, make_trace, replay
+from repro.serve.trace import greedy_agreement
+
+EXCLUDE = ["embed", "lm_head"]  # factorize the blocks, keep the vocab maps
+
+
+@pytest.fixture(scope="module")
+def shaped():
+    """Tiny transformer with power-law singular spectra (alpha=2.5) —
+    the trained-weight regime where low-rank truncation is benign."""
+    cfg = get_config("paper-tiny").reduced()
+    model = build_model(jax.random.PRNGKey(0), cfg)
+    return spectral_decay(model, 2.5, exclude=EXCLUDE), cfg
+
+
+@pytest.fixture(scope="module")
+def flat():
+    """Same architecture, raw random init: flat spectrum, the adversarial
+    case for truncation (used for full-rank exactness, which must hold
+    regardless of spectrum)."""
+    cfg = get_config("paper-tiny").reduced()
+    return build_model(jax.random.PRNGKey(0), cfg), cfg
+
+
+def _prompts(lengths, vocab, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, n).astype(np.int32) for n in lengths]
+
+
+def _serve(model, cfg, trace, **kw):
+    eng = ContinuousEngine(model, cfg, batch=3, max_len=32,
+                           max_prompt_len=16, chunk_size=8, buckets=(8, 16),
+                           **kw)
+    comps, _ = replay(eng, trace)
+    return comps
+
+
+# ---- full-rank exactness: the 3% agreement hole was a spectrum problem ------
+
+
+def test_full_rank_svd_matches_dense_logits(flat):
+    """rank=1.0 with gate=False keeps every LED at r = min(m, n): the SVD
+    factors reconstruct W exactly, so logits match dense to float32
+    round-off even on a flat-spectrum model."""
+    model, cfg = flat
+    fact, rep = auto_fact(model, 1.0, solver="svd", exclude=EXCLUDE,
+                          gate=False, return_report=True)
+    toks = jnp.asarray(_prompts([12], cfg.vocab, seed=7)[0])[None, :]
+    ld, _ = model(toks)
+    lf, _ = fact(toks)
+    err = float(jnp.max(jnp.abs(ld - lf)))
+    assert err < 1e-3, f"full-rank SVD logit error {err}"
+    # per-layer reconstruction error is reported and ~0 at full rank
+    assert rep.entries
+    for path, kind, m, n, r, rel in rep.entries:
+        assert r == min(m, n)
+        assert rel < 1e-4, f"{path}: full-rank rel err {rel}"
+    assert "rel_err" in rep.summary()
+
+
+def test_full_rank_factorized_serving_agrees_exactly(flat):
+    """The full-rank factorized model, served through the engine, emits
+    the same greedy tokens as the dense engine on a seeded trace."""
+    model, cfg = flat
+    fact = auto_fact(model, 1.0, solver="svd", exclude=EXCLUDE, gate=False)
+    trace = make_trace(6, seed=11, load=0.7, min_prompt=2, max_prompt=16,
+                       min_new=2, max_new=8, vocab=cfg.vocab)
+    dense_comps = _serve(model, cfg, trace)
+    fact_comps = _serve(fact, cfg, trace)
+    assert len(fact_comps) == len(trace)
+    assert greedy_agreement(dense_comps, fact_comps) == 1.0
+
+
+# ---- per-layer reconstruction-error bounds ----------------------------------
+
+
+def test_recon_error_monotone_in_rank(shaped):
+    """On the shaped model, SVD reconstruction error shrinks as rank
+    grows, layer by layer; at ratio 0.5 every block layer is under 5%
+    relative Frobenius error (alpha=2.5 concentrates >95% of the energy
+    in the top half of the spectrum)."""
+    model, _ = shaped
+    errs = {}
+    for ratio in (0.25, 0.5):
+        _, rep = auto_fact(model, ratio, solver="svd", exclude=EXCLUDE,
+                           gate=False, return_report=True)
+        errs[ratio] = {e[0]: e[5] for e in rep.entries}
+    assert errs[0.25].keys() == errs[0.5].keys()
+    for path in errs[0.25]:
+        assert errs[0.5][path] <= errs[0.25][path] + 1e-6, path
+        assert errs[0.5][path] < 0.05, f"{path}: {errs[0.5][path]}"
+
+
+def test_svd_recon_beats_random_per_layer(shaped):
+    """SVD is the optimal rank-r approximation (Eckart-Young); the random
+    solver must never beat it on any layer."""
+    model, _ = shaped
+    _, rs = auto_fact(model, 0.5, solver="svd", exclude=EXCLUDE,
+                      gate=False, return_report=True)
+    _, rr = auto_fact(model, 0.5, solver="random", exclude=EXCLUDE,
+                      gate=False, return_report=True)
+    svd_err = {e[0]: e[5] for e in rs.entries}
+    rnd_err = {e[0]: e[5] for e in rr.entries}
+    assert svd_err.keys() == rnd_err.keys() and svd_err
+    for path in svd_err:
+        assert svd_err[path] <= rnd_err[path] + 1e-6, path
+
+
+# ---- the solver x rank serving matrix ---------------------------------------
+
+
+@pytest.mark.parametrize("solver", ["svd", "snmf", "random"])
+@pytest.mark.parametrize("ratio", [0.25, 0.5, 1.0])
+def test_solver_rank_matrix_serves(shaped, solver, ratio):
+    """Every cell of the matrix must serve: the engine drains the trace,
+    every completion is well-formed, and on the SVD column the factorized
+    tokens track the dense engine (>= 0.9 agreement at ratio 0.5, exact
+    at full rank)."""
+    model, cfg = shaped
+    kw = {"key": jax.random.PRNGKey(3)} if solver == "random" else {}
+    if solver == "snmf":
+        kw["num_iter"] = 10  # keep the matrix cheap; quality asserted on svd
+    fact = auto_fact(model, ratio, solver=solver, exclude=EXCLUDE,
+                     gate=False, **kw)
+    trace = make_trace(6, seed=23, load=0.7, min_prompt=2, max_prompt=16,
+                       min_new=2, max_new=8, vocab=cfg.vocab)
+    comps = _serve(fact, cfg, trace)
+    assert len(comps) == len(trace)
+    for (_, req), c in zip(trace, comps):  # trace order == uid order
+        assert len(c.tokens) == req.max_new_tokens
+        assert all(0 <= t < cfg.vocab for t in c.tokens)
+    if solver == "svd":
+        dense_comps = _serve(model, cfg, trace)
+        agree = greedy_agreement(dense_comps, comps)
+        if ratio == 1.0:
+            assert agree == 1.0
+        elif ratio == 0.5:
+            assert agree >= 0.9, f"svd@0.5 agreement {agree}"
+
+
+def test_rank_half_agreement_on_seeded_traces(shaped):
+    """The headline number: svd @ ratio 0.5 on the shaped model keeps
+    greedy agreement >= 0.9 across independent seeded traces (this is
+    the bound the benchmark asserts into BENCH_serve.json)."""
+    model, cfg = shaped
+    fact = auto_fact(model, 0.5, solver="svd", exclude=EXCLUDE, gate=False)
+    for seed in (1, 2):
+        trace = make_trace(5, seed=seed, load=0.7, min_prompt=2,
+                           max_prompt=16, min_new=4, max_new=8,
+                           vocab=cfg.vocab)
+        agree = greedy_agreement(_serve(model, cfg, trace),
+                                 _serve(fact, cfg, trace))
+        assert agree >= 0.9, f"seed={seed}: agreement {agree}"
+
+
+# ---- factorized engine matches one-shot generate ----------------------------
+
+
+def test_factorized_continuous_matches_generate(shaped):
+    """The factorized model is just a model: the continuous engine's
+    output for it must match one-shot ``generate`` token for token
+    (slot recycling, chunked prefill and paging change nothing)."""
+    model, cfg = shaped
+    fact = auto_fact(model, 0.5, solver="svd", exclude=EXCLUDE, gate=False)
+    prompts = _prompts([9, 5, 12, 3], cfg.vocab, seed=31)
+    eng = ContinuousEngine(fact, cfg, batch=2, max_len=32,
+                           max_prompt_len=16, chunk_size=8, buckets=(8, 16))
+    for p in prompts:
+        eng.submit(p, max_new_tokens=5)
+    comps = eng.run()
+    assert len(comps) == len(prompts)
+    for p, c in zip(prompts, comps):
+        cache = fact.init_cache(1, 32, cfg, dtype=jnp.float32)
+        out, _ = generate(fact, jnp.asarray(p)[None, :], cache, n_steps=5)
+        np.testing.assert_array_equal(np.array(c.tokens),
+                                      np.asarray(out)[0],
+                                      err_msg=f"plen={p.size}")
+
+
+# ---- fuse='pallas' parity (interpret mode off-TPU) --------------------------
+
+
+def test_fused_led_forward_parity(shaped):
+    """auto_fact(fuse='pallas') routes every LED through the Pallas
+    kernel; logits must match the jnp path to kernel tolerance and the
+    greedy tokens must be identical on a seeded prompt."""
+    model, cfg = shaped
+    f_jnp = auto_fact(model, 0.5, solver="svd", exclude=EXCLUDE,
+                      gate=False, fuse="jnp")
+    f_pl = auto_fact(model, 0.5, solver="svd", exclude=EXCLUDE,
+                     gate=False, fuse="pallas")
+    toks = jnp.asarray(_prompts([10], cfg.vocab, seed=17)[0])[None, :]
+    lj, _ = f_jnp(toks)
+    lp, _ = f_pl(toks)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lj),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(lp, -1)),
+                                  np.asarray(jnp.argmax(lj, -1)))

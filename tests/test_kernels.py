@@ -53,6 +53,86 @@ def test_led_kernel_batched_leading_dims():
                                atol=1e-4)
 
 
+def _mk_stacked(stack, m, k, r, n, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k1, (*stack, m, k))
+    a = jax.random.normal(k2, (*stack, k, r)) / np.sqrt(k)
+    b = jax.random.normal(k3, (*stack, r, n)) / np.sqrt(r)
+    return x, a, b
+
+
+@pytest.mark.parametrize("shape", [(64, 128, 16, 96), (100, 300, 17, 130)])
+def test_led_kernel_three_way_parity(shape):
+    """kernel == jnp oracle == unfused (x @ a) @ b, all three ways."""
+    m, k, r, n = shape
+    x, a, b = _mk(m, k, r, n, jnp.float32, seed=3)
+    y_k = np.asarray(led_matmul(x, a, b))
+    y_r = np.asarray(led_matmul_ref(x, a, b))
+    y_u = np.asarray((x @ a) @ b)
+    np.testing.assert_allclose(y_k, y_r, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(y_k, y_u, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(y_r, y_u, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("stack", [(3,), (2, 2)])
+def test_led_kernel_stacked_factors(stack):
+    """Stacked A/B (layer-scanned or expert-stacked LED weights, the
+    shapes ``auto_fact`` emits for scan-over-layers models): the kernel
+    vmaps over the shared leading axes of x, a and b."""
+    x, a, b = _mk_stacked(stack, 24, 64, 8, 48, seed=11)
+    y_k = np.asarray(led_matmul(x, a, b))
+    assert y_k.shape == (*stack, 24, 48)
+    np.testing.assert_allclose(y_k, np.asarray(led_matmul_ref(x, a, b)),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(y_k, np.asarray((x @ a) @ b),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_led_kernel_stacked_matches_auto_fact_shapes():
+    """Drive the kernel with factors produced by ``auto_fact`` itself on
+    a layer-stacked Linear — the exact (L, d, r)/(L, r, d) layout the
+    serving model's scanned blocks carry."""
+    from repro.core import auto_fact
+    from repro.nn import Linear
+
+    lin = Linear.create(jax.random.PRNGKey(7), 64, 96, stack_dims=(3,))
+    led = auto_fact(lin, 0.5, solver="svd", gate=False)
+    x = jax.random.normal(jax.random.PRNGKey(8), (3, 10, 64))
+    y_k = np.asarray(led_matmul(x, led.A, led.B))
+    np.testing.assert_allclose(y_k, np.asarray((x @ led.A) @ led.B),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(
+        y_k, np.asarray(led_matmul_ref(x, led.A, led.B)),
+        atol=1e-4, rtol=1e-4)
+
+
+def test_led_kernel_stacked_mismatched_leads_raise():
+    x, a, b = _mk_stacked((3,), 8, 16, 4, 8)
+    with pytest.raises(ValueError):
+        led_matmul(x, a[:2], b)
+    with pytest.raises(ValueError):
+        led_matmul(x[:2], a, b)
+
+
+def test_led_trainable_grads_stacked_factors():
+    """Stacked factors fall back to jax.vjp of the reference (the
+    hand-derived backward is 2D-only); gradients must still match
+    autodiff of the unfused product."""
+    from repro.kernels.ops import led_matmul_trainable
+
+    x, a, b = _mk_stacked((3,), 12, 32, 4, 24, seed=13)
+    w = jax.random.normal(jax.random.PRNGKey(14), (3, 12, 24))
+    loss_tr = lambda x, a, b: jnp.sum(led_matmul_trainable(x, a, b) * w)
+    loss_un = lambda x, a, b: jnp.sum(((x @ a) @ b) * w)
+    g_tr = jax.grad(loss_tr, argnums=(0, 1, 2))(x, a, b)
+    g_un = jax.grad(loss_un, argnums=(0, 1, 2))(x, a, b)
+    for gt, gu, name in zip(g_tr, g_un, "xab"):
+        assert gt.shape == gu.shape
+        np.testing.assert_allclose(np.asarray(gt), np.asarray(gu),
+                                   atol=1e-3, rtol=1e-4,
+                                   err_msg=f"d{name} mismatch")
+
+
 @given(m=st.integers(1, 80), k=st.integers(1, 96), r=st.integers(1, 24),
        n=st.integers(1, 80))
 @settings(max_examples=10)

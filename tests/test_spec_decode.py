@@ -1,0 +1,302 @@
+"""Speculative decoding: low-rank draft, dense verify, bit-exact output.
+
+The draft model proposes ``spec_k`` greedy tokens with cheap factorized
+weights; the dense verifier re-scores them in ONE multi-token decode and
+the engine commits the agreeing prefix plus the verifier's own next
+token.  Every emitted token is a dense argmax conditioned on previously
+emitted tokens, so the output is bit-identical to plain greedy decoding
+*by construction* — the draft can only change how many tokens land per
+step, never which tokens.  These tests pin that contract:
+
+- spec engine == plain engine == one-shot ``generate``, token for token,
+  across paged and dense KV layouts, stop ids, and slot recycling;
+- property sweep over draft depth k and trace seeds (via ``_hyp``);
+- a pathologically bad draft (random solver) still terminates and still
+  emits exact tokens — just with zero accepted drafts;
+- the multi-token decode primitive underneath the verifier matches s
+  sequential single-token decodes bit for bit.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.configs import get_config
+from repro.core import auto_fact, spectral_decay
+from repro.models import build_model
+from repro.serve import ContinuousEngine, generate, make_trace, replay
+from repro.serve.engine import UnsupportedCacheError
+
+EXCLUDE = ["embed", "lm_head"]
+
+
+@pytest.fixture(scope="module")
+def shaped():
+    cfg = get_config("paper-tiny").reduced()
+    model = build_model(jax.random.PRNGKey(0), cfg)
+    return spectral_decay(model, 2.5, exclude=EXCLUDE), cfg
+
+
+@pytest.fixture(scope="module")
+def draft(shaped):
+    """Rank-0.5 SVD factorization of the serving model: cheap enough to
+    draft with, close enough to be accepted most of the time."""
+    model, _ = shaped
+    return auto_fact(model, 0.5, solver="svd", exclude=EXCLUDE, gate=False)
+
+
+def _baseline(model, cfg, prompt, n, max_len=64):
+    cache = model.init_cache(1, max_len, cfg, dtype=jnp.float32)
+    out, _ = generate(model, jnp.asarray(prompt)[None, :], cache, n_steps=n)
+    return np.asarray(out)[0]
+
+
+def _prompts(lengths, vocab, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, n).astype(np.int32) for n in lengths]
+
+
+def _engine(model, cfg, *, batch=4, max_len=64, **kw):
+    return ContinuousEngine(model, cfg, batch=batch, max_len=max_len,
+                            max_prompt_len=32, chunk_size=8,
+                            buckets=(8, 16, 32), **kw)
+
+
+# ---- bit-exactness vs the plain engine --------------------------------------
+
+
+@pytest.mark.parametrize("layout", ["paged", "dense"])
+def test_spec_matches_plain_engine(shaped, draft, layout):
+    """Same trace through a speculative engine and a plain one: tokens
+    and finish reasons identical, and the good draft earns a nonzero
+    acceptance rate."""
+    model, cfg = shaped
+    trace = make_trace(6, seed=41, load=0.7, min_prompt=3, max_prompt=20,
+                       min_new=4, max_new=12, vocab=cfg.vocab)
+    plain = _engine(model, cfg, kv_layout=layout)
+    spec = _engine(model, cfg, kv_layout=layout, draft_model=draft,
+                   spec_k=4)
+    pc, _ = replay(plain, trace)
+    sc, _ = replay(spec, trace)
+    assert len(sc) == len(trace)
+    # uid counters are global across engines: compare by submission order
+    for (_, req), p, s in zip(trace, pc, sc):
+        np.testing.assert_array_equal(
+            np.array(s.tokens), np.array(p.tokens),
+            err_msg=f"{layout}: spec diverged, plen={req.prompt.size}")
+        assert s.finish_reason == p.finish_reason
+    stats = spec.spec_stats()
+    assert stats["spec_k"] == 4
+    assert stats["spec_rounds"] > 0
+    assert stats["spec_acceptance_rate"] > 0.0
+
+
+def test_spec_matches_generate(shaped, draft):
+    """Spec engine completions equal the one-shot ``generate`` ground
+    truth (schedule-independent, so this also covers admission
+    interleaving differing from the plain engine's)."""
+    model, cfg = shaped
+    prompts = _prompts([5, 12, 20, 3], cfg.vocab, seed=2)
+    eng = _engine(model, cfg, draft_model=draft, spec_k=4)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=10)
+    comps = eng.run()
+    assert len(comps) == len(prompts)
+    for p, c in zip(prompts, comps):
+        np.testing.assert_array_equal(np.array(c.tokens),
+                                      _baseline(model, cfg, p, 10),
+                                      err_msg=f"plen={p.size}")
+        assert len(c.tokens) == 10  # no token lost, none duplicated
+
+
+# ---- property sweep: draft depth x trace seed -------------------------------
+
+
+_ENGINES = {}
+
+
+@given(k=st.integers(1, 5), seed=st.integers(0, 10_000))
+@settings(max_examples=5, deadline=None)
+def test_spec_bit_exact_property(shaped, draft, k, seed):
+    """For any draft depth and any seeded workload, accepted-prefix
+    commitment never changes the emitted tokens.  Engines are cached per
+    k and reused across examples — reuse IS the test: stale spec state
+    from a previous example's requests must not leak into the next."""
+    model, cfg = shaped
+    if k not in _ENGINES:
+        _ENGINES[k] = _engine(model, cfg, draft_model=draft, spec_k=k)
+    eng = _ENGINES[k]
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab, int(rng.integers(3, 24)))
+               .astype(np.int32) for _ in range(3)]
+    n_new = [int(rng.integers(2, 9)) for _ in range(3)]
+    for p, n in zip(prompts, n_new):
+        eng.submit(p, max_new_tokens=n)
+    comps = eng.run()
+    assert len(comps) == len(prompts)
+    for p, n, c in zip(prompts, n_new, comps):
+        assert len(c.tokens) == n
+        np.testing.assert_array_equal(np.array(c.tokens),
+                                      _baseline(model, cfg, p, n),
+                                      err_msg=f"k={k} seed={seed} "
+                                              f"plen={p.size}")
+
+
+# ---- slot recycling ---------------------------------------------------------
+
+
+def test_recycled_slot_no_loss_no_duplication(shaped, draft):
+    """Four requests through a 1-slot spec engine: every request after
+    the first reuses a slot whose main AND draft cache rows still hold
+    the previous occupant's tokens beyond the parked frontier.  Each
+    completion must match a fresh baseline with exact token counts."""
+    model, cfg = shaped
+    prompts = _prompts([9, 5, 12, 3], cfg.vocab, seed=21)
+    eng = _engine(model, cfg, batch=1, draft_model=draft, spec_k=3)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=6)
+    comps = eng.run()
+    assert len(comps) == len(prompts)
+    for p, c in zip(prompts, comps):
+        assert len(c.tokens) == 6
+        np.testing.assert_array_equal(
+            np.array(c.tokens), _baseline(model, cfg, p, 6),
+            err_msg=f"recycled slot corrupted plen={p.size}")
+
+
+# ---- degenerate draft: still exact, still terminates ------------------------
+
+
+def test_degenerate_draft_terminates_and_stays_exact(shaped):
+    """A random-solver rank-0.25 draft proposes garbage: acceptance
+    collapses toward zero but the verifier's own argmax still advances
+    every slot each round (m >= 1), so the engine terminates with the
+    exact dense tokens."""
+    model, cfg = shaped
+    bad = auto_fact(model, 0.25, solver="random", exclude=EXCLUDE,
+                    gate=False, key=jax.random.PRNGKey(9))
+    prompts = _prompts([7, 14], cfg.vocab, seed=4)
+    eng = _engine(model, cfg, batch=2, draft_model=bad, spec_k=3)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=8)
+    comps = eng.run(max_steps=500)  # termination bound
+    for p, c in zip(prompts, comps):
+        np.testing.assert_array_equal(np.array(c.tokens),
+                                      _baseline(model, cfg, p, 8))
+    stats = eng.spec_stats()
+    assert stats["spec_rounds"] > 0
+    assert 0.0 <= stats["spec_acceptance_rate"] <= 1.0
+
+
+# ---- stop ids through the spec path -----------------------------------------
+
+
+def test_spec_stop_ids_match_plain(shaped, draft):
+    """Stop tokens may land mid-accepted-prefix: the spec engine must
+    cut the emission at the stop exactly where the plain engine does."""
+    model, cfg = shaped
+    prompts = _prompts([6, 11, 17], cfg.vocab, seed=8)
+    stop = (5, 17)
+    plain = _engine(model, cfg)
+    spec = _engine(model, cfg, draft_model=draft, spec_k=4)
+    for p in prompts:
+        plain.submit(p, max_new_tokens=12, stop_ids=stop)
+        spec.submit(p, max_new_tokens=12, stop_ids=stop)
+    pc, sc = plain.run(), spec.run()
+    for p, s in zip(pc, sc):
+        np.testing.assert_array_equal(np.array(s.tokens), np.array(p.tokens))
+        assert s.finish_reason == p.finish_reason
+
+
+# ---- accounting & guardrails ------------------------------------------------
+
+
+def test_spec_accounting(shaped, draft):
+    model, cfg = shaped
+    eng = _engine(model, cfg, batch=2, draft_model=draft, spec_k=4)
+    for p in _prompts([8, 15], cfg.vocab, seed=6):
+        eng.submit(p, max_new_tokens=8)
+    eng.run()
+    s = eng.spec_stats()
+    # each round drafts spec_k tokens per running slot (1..batch of them)
+    assert s["spec_k"] * s["spec_rounds"] <= s["spec_drafted_tokens"] \
+        <= s["spec_k"] * s["spec_rounds"] * eng.batch
+    assert s["spec_drafted_tokens"] % s["spec_k"] == 0
+    assert 0 <= s["spec_accepted_tokens"] <= s["spec_drafted_tokens"]
+    assert s["spec_acceptance_rate"] == pytest.approx(
+        s["spec_accepted_tokens"] / s["spec_drafted_tokens"])
+
+
+def test_spec_rejects_sampling(shaped, draft):
+    """Greedy-only: the accepted-prefix argument needs argmax on both
+    sides, so sampled requests are refused up front."""
+    model, cfg = shaped
+    eng = _engine(model, cfg, batch=2, draft_model=draft, spec_k=2)
+    with pytest.raises(ValueError, match="greedy"):
+        eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=4,
+                   temperature=0.8)
+
+
+def test_spec_requires_draft_and_k(shaped, draft):
+    model, cfg = shaped
+    with pytest.raises(ValueError, match="draft_model and spec_k"):
+        _engine(model, cfg, spec_k=3)
+    with pytest.raises(ValueError, match="draft_model and spec_k"):
+        _engine(model, cfg, draft_model=draft)
+
+
+def test_spec_unsupported_cache_kind(draft):
+    """Ring/hybrid/ssm slots have no multi-token decode; the constructor
+    refuses a draft there instead of silently decoding wrong."""
+    cfg = get_config("paper-tiny").reduced().replace(window=8)
+    model = build_model(jax.random.PRNGKey(0), cfg)
+    d = auto_fact(model, 0.5, solver="svd", exclude=EXCLUDE, gate=False)
+    with pytest.raises(UnsupportedCacheError):
+        ContinuousEngine(model, cfg, batch=2, max_len=32, max_prompt_len=16,
+                         draft_model=d, spec_k=2)
+
+
+# ---- the multi-token decode primitive ---------------------------------------
+
+
+@pytest.mark.parametrize("per_slot", [False, True])
+def test_multitoken_decode_matches_sequential(shaped, per_slot):
+    """decode((b, s)) == s chained decode((b, 1)) calls, bit for bit —
+    logits, cache contents and length counters — for the lock-step and
+    per-slot dense layouts (the paged layout is covered end-to-end by
+    the spec-vs-plain paged test)."""
+    model, cfg = shaped
+    b, s, plen = 2, 4, 6
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab, (b, plen)).astype(np.int32))
+    c0 = model.init_cache(b, 32, cfg, dtype=jnp.float32, per_slot=per_slot)
+    _, c0 = model.prefill(toks, c0)
+    step = jnp.asarray(np.random.default_rng(1).integers(
+        0, cfg.vocab, (b, s)).astype(np.int32))
+
+    l_multi, c_multi = model.decode(step, c0)
+    assert l_multi.shape == (b, s, cfg.vocab)
+
+    c_seq, logits = c0, []
+    for j in range(s):
+        lj, c_seq = model.decode(step[:, j:j + 1], c_seq)
+        logits.append(lj)
+    l_seq = jnp.concatenate(logits, axis=1)
+
+    np.testing.assert_array_equal(np.asarray(l_multi), np.asarray(l_seq))
+    np.testing.assert_array_equal(np.asarray(c_multi.k),
+                                  np.asarray(c_seq.k))
+    np.testing.assert_array_equal(np.asarray(c_multi.length),
+                                  np.asarray(c_seq.length))
+
+
+def test_multitoken_decode_ring_raises(shaped):
+    """Sliding-window ring lanes reject s > 1 loudly."""
+    cfg = get_config("paper-tiny").reduced().replace(window=8)
+    model = build_model(jax.random.PRNGKey(1), cfg)
+    c = model.init_cache(1, 32, cfg, dtype=jnp.float32)
+    _, c = model.prefill(jnp.zeros((1, 4), jnp.int32), c)
+    with pytest.raises(NotImplementedError):
+        model.decode(jnp.zeros((1, 2), jnp.int32), c)

@@ -55,6 +55,14 @@ ring-KV lanes asserted resident at O(window) bytes per slot — not the
 O(max_len) a dense lane would pin (the engine reports the lane length in
 ``kv_stats()['kv_lane_tokens']``).
 
+An **http_serve cell** pushes the same trace through the async HTTP
+front door (``repro.serve.http`` + the ``repro.launch.loadgen`` client):
+closed-loop SSE completions asserted bit-identical to the offline paged
+replay, then an open-loop run with Poisson arrivals and a 30% client
+disconnect fraction asserted to leak zero paged blocks, with a
+``/metrics`` scrape checked at the end.  Closed- and open-loop
+tok/s + TTFT/latency percentiles land in ``summary["http_serve"]``.
+
 A decode-step microbenchmark times the jitted batched decode step alone
 (gather vs fused kernel) — on CPU the fused kernel runs in interpret
 mode, so that timing measures overhead parity, not the TPU win.
@@ -146,6 +154,94 @@ def spec_step_ms(model, draft, cfg, *, batch, max_prompt_len, block_size,
             draft_s += t1 - t0
             verify_s += t2 - t1
     return draft_s / iters * 1e3, verify_s / iters * 1e3
+
+
+def http_serve_cell(model, cfg, trace, paged_done, *, dims, block_size,
+                    n_open, seed) -> dict:
+    """The service front door under load: the SAME trace served over HTTP
+    (SSE streaming) must emit bit-identical tokens to the offline paged
+    replay, and an open-loop run with client disconnects must leak zero
+    paged blocks.  Returns the ``http_serve`` summary cell."""
+    import asyncio
+
+    from repro.launch.loadgen import (make_payloads, run_closed_loop,
+                                      run_open_loop, summarize)
+    from repro.serve.http import BackgroundServer
+
+    def wait_drained(eng, timeout=60.0):
+        t0 = time.perf_counter()
+        while time.perf_counter() - t0 < timeout:
+            if eng.scheduler.idle and eng.manager.fully_free:
+                return
+            time.sleep(0.05)
+        raise AssertionError("http engine did not drain")
+
+    # closed loop: the trace's own requests, tokens vs the offline replay
+    eng = ContinuousEngine(model, cfg, **dims, kv_layout="paged",
+                           block_size=block_size)
+    payloads = [{"prompt": req.prompt.tolist(),
+                 "max_new_tokens": req.max_new_tokens} for _, req in trace]
+    with BackgroundServer(eng, max_pending=len(payloads) + 1) as bg:
+        t0 = time.perf_counter()
+        closed = asyncio.run(run_closed_loop(bg.host, bg.port, payloads,
+                                             concurrency=4))
+        closed_wall = time.perf_counter() - t0
+        for cp, r in zip(paged_done, closed):
+            assert r["status"] == 200, f"http request failed: {r['error']}"
+            assert r["tokens"] == cp.tokens, \
+                f"http/offline divergence (prompt_len={cp.prompt_len})"
+        closed_stats = summarize(closed, closed_wall)
+        print(f"http closed : {closed_stats['tokens_per_s']:9.1f} tok/s   "
+              f"p50 {closed_stats['latency_p50_ms']:7.1f} ms   "
+              f"ttft p50 {closed_stats['ttft_p50_ms']:6.1f} ms   "
+              f"({closed_stats['served']} reqs over SSE)")
+        print("http serve: greedy tokens bit-identical to the offline "
+              "paged replay")
+        wait_drained(eng)
+
+        # open loop with client disconnects: Poisson arrivals, a fraction
+        # of clients abandon after their first token; every cancel must
+        # return its blocks (pool asserted fully free afterwards)
+        open_payloads = make_payloads(n_open, seed=seed + 4, min_prompt=4,
+                                      max_prompt=dims["max_prompt_len"] // 2,
+                                      min_new=4, max_new=8, vocab=cfg.vocab)
+        t0 = time.perf_counter()
+        opened = asyncio.run(run_open_loop(bg.host, bg.port, open_payloads,
+                                           rate=20.0, cancel_frac=0.3,
+                                           seed=seed))
+        wait_drained(eng)
+        open_wall = time.perf_counter() - t0
+        open_stats = summarize(opened, open_wall)
+        assert open_stats["errors"] == 0, f"open-loop errors: {open_stats}"
+        assert eng.manager.fully_free, \
+            "cancelled requests leaked paged blocks"
+        n_cancel = open_stats["cancelled_by_client"]
+        print(f"http open   : {open_stats['served']} served, "
+              f"{n_cancel} client-cancelled, 0 leaked blocks "
+              f"({open_stats['streamed_tokens']} tok streamed)")
+
+        # the scrape endpoint works under/after load
+        status, body = asyncio.run(_scrape(bg.host, bg.port))
+        assert status == 200
+        text = body.decode()
+        for name in ("repro_serve_ttft_seconds", "repro_serve_prefix_hit_rate",
+                     "repro_serve_completions_total",
+                     "repro_serve_kv_blocks_in_use"):
+            assert name in text, f"metric {name} missing from /metrics"
+        print("http serve: /metrics scrape OK")
+
+    return {
+        "tokens_identical_to_paged_replay": True,  # asserted above
+        "closed_loop": closed_stats,
+        "open_loop": {**open_stats, "rate_per_s": 20.0, "cancel_frac": 0.3},
+        "cancel_leaked_blocks": 0,                 # asserted fully_free
+        "metrics_scrape_ok": True,                 # asserted above
+    }
+
+
+async def _scrape(host, port):
+    from repro.launch.loadgen import fetch
+    return await fetch(host, port, "/metrics")
 
 
 def run(*, smoke: bool = False, fact_rank: float = 0.5, solver: str = "svd",
@@ -387,6 +483,11 @@ def run(*, smoke: bool = False, fact_rank: float = 0.5, solver: str = "svd",
           f"(k={spec_k} factorized steps) + verify {verify_ms:.2f} ms "
           f"(1 dense multi-token step)")
 
+    # ---- HTTP front door: same trace through the async server --------------
+    http_summary = http_serve_cell(model, cfg, trace, paged_done,
+                                   dims=dims, block_size=block_size,
+                                   n_open=max(6, n_requests // 2), seed=seed)
+
     # sanity: every request drained, token budgets respected
     for done in (dense_done, paged_done, fused_done, spec_done,
                  mono_done, chunk_done, reuse_done, plain_done):
@@ -444,6 +545,7 @@ def run(*, smoke: bool = False, fact_rank: float = 0.5, solver: str = "svd",
             "verify_step_ms": verify_ms,
             "tokens_identical_to_dense": True,  # asserted above
         },
+        "http_serve": http_summary,
         "rows": rows,
     }
     return rows, summary

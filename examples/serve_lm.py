@@ -15,6 +15,15 @@ serving side) over the paged KV cache with chunked, prefix-aware prefill.
     PYTHONPATH=src python examples/serve_lm.py --reduced --batch 4 \
         --n-requests 8 --stream
 
+    # the HTTP front door: SSE streaming over POST /v1/generate,
+    # client-disconnect/deadline cancellation, bounded admission queue
+    # (429 when full), GET /metrics Prometheus exposition; drive it
+    # with the closed-/open-loop client in `repro.launch.loadgen`
+    PYTHONPATH=src python examples/serve_lm.py --reduced --batch 4 \
+        --http --port 8000 --max-pending 32 --request-timeout 30
+    PYTHONPATH=src python -m repro.launch.loadgen --port 8000 \
+        --mode open --rate 8 --n-requests 32 --cancel-frac 0.2
+
     # heterogeneous families: hymba (ring-buffer KV + SSM state) and
     # mamba2 (pure SSM) serve through the same engine via per-slot state
     PYTHONPATH=src python examples/serve_lm.py --reduced --batch 4 \
@@ -34,6 +43,9 @@ Poisson trace.  ``--factorize --rank R --solver svd`` serves the
 ``auto_fact``-factorized model and reports dense-vs-factorized greedy
 agreement; ``--spec-k K`` runs speculative decoding (rank-``R``
 factorized draft + dense multi-token verify, bit-exact greedy).
+``--http`` skips the offline trace entirely and serves the engine over
+HTTP (``--host`` / ``--port`` / ``--max-pending`` / ``--request-timeout``
+— see ``src/repro/serve/README.md`` §The HTTP front door).
 
 **The admission pipeline** (see ``src/repro/serve/README.md``): a prompt
 is prefilled in ``chunk_size``-token chunks, each right-padded to one of

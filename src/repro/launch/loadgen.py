@@ -1,0 +1,369 @@
+"""Load generator for the HTTP serving front door (``repro.serve.http``).
+
+    # boot the server in one shell...
+    PYTHONPATH=src python -m repro.launch.serve --reduced --http --port 8000
+
+    # ...and drive it from another
+    PYTHONPATH=src python -m repro.launch.loadgen --port 8000 \
+        --mode open --rate 8 --n-requests 32 --cancel-frac 0.2 \
+        --json loadgen_summary.json --strict
+
+Pure stdlib + numpy — no jax, no model: the client speaks the server's
+own SSE protocol over raw asyncio sockets, so it measures the full
+serving stack (HTTP parse, admission queue, pump, stream writes), not a
+shortcut around it.
+
+Two driving modes:
+
+* ``--mode closed`` — **closed loop**: ``--concurrency`` workers each
+  keep exactly one request in flight, next request submitted when the
+  previous finishes.  Measures per-request latency under a fixed
+  concurrency; backpressure never triggers by construction (offered load
+  follows service rate).
+* ``--mode open`` — **open loop**: requests arrive by a Poisson process
+  at ``--rate`` per second regardless of completions — the arrival
+  pattern real traffic has.  Under overload the admission queue fills
+  and the server answers 429 (counted, not retried); ``--cancel-frac``
+  makes that fraction of clients disconnect after their first token,
+  exercising the cancellation path under load.
+
+Per-request results carry ``status``, ``tokens``, ``finish_reason``,
+``ttft_s``, ``latency_s``, and ``cancelled_by_client``; ``summarize``
+reduces them to the throughput/latency summary the benchmark stores and
+CI uploads.  ``--strict`` exits non-zero when the run looks broken
+(unreachable server, unscrapeable ``/metrics``, a request with no
+terminal outcome, or zero client cancels despite ``--cancel-frac``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import sys
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+# -- protocol client ---------------------------------------------------------
+
+
+async def fetch(host: str, port: int, path: str,
+                timeout_s: float = 10.0) -> Tuple[int, bytes]:
+    """One GET; returns (status, body).  Raises on connect failure."""
+    reader, writer = await asyncio.wait_for(
+        asyncio.open_connection(host, port), timeout_s)
+    try:
+        writer.write(f"GET {path} HTTP/1.1\r\nHost: {host}\r\n"
+                     f"Connection: close\r\n\r\n".encode())
+        await writer.drain()
+        status_line = await asyncio.wait_for(reader.readline(), timeout_s)
+        status = int(status_line.split()[1])
+        n_body = None
+        while True:
+            h = await asyncio.wait_for(reader.readline(), timeout_s)
+            if h in (b"\r\n", b"\n", b""):
+                break
+            k, _, v = h.decode("latin1").partition(":")
+            if k.strip().lower() == "content-length":
+                n_body = int(v)
+        body = (await reader.readexactly(n_body) if n_body is not None
+                else await reader.read())
+        return status, body
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionError, OSError):
+            pass
+
+
+async def sse_generate(host: str, port: int, payload: dict, *,
+                       cancel_after_tokens: Optional[int] = None,
+                       timeout_s: float = 60.0) -> dict:
+    """POST one request to ``/v1/generate`` and consume its SSE stream.
+
+    ``cancel_after_tokens=N`` disconnects abruptly after the N-th token —
+    the client-abandons-mid-stream behaviour the server must translate
+    into an engine cancel.  Never raises for protocol-level failures: the
+    result dict records what happened (``status`` 0 = connect failure)."""
+    res = {"status": 0, "tokens": [], "finish_reason": None,
+           "ttft_s": None, "latency_s": None,
+           "cancelled_by_client": False, "error": None}
+    t0 = time.monotonic()
+    body = json.dumps(payload).encode()
+    try:
+        reader, writer = await asyncio.wait_for(
+            asyncio.open_connection(host, port), timeout_s)
+    except (OSError, asyncio.TimeoutError) as exc:
+        res["error"] = f"connect: {exc!r}"
+        return res
+    try:
+        writer.write(
+            f"POST /v1/generate HTTP/1.1\r\nHost: {host}\r\n"
+            f"Content-Type: application/json\r\n"
+            f"Content-Length: {len(body)}\r\n"
+            f"Connection: close\r\n\r\n".encode() + body)
+        await writer.drain()
+        status_line = await asyncio.wait_for(reader.readline(), timeout_s)
+        res["status"] = int(status_line.split()[1])
+        n_body = None
+        while True:  # headers
+            h = await asyncio.wait_for(reader.readline(), timeout_s)
+            if h in (b"\r\n", b"\n", b""):
+                break
+            k, _, v = h.decode("latin1").partition(":")
+            if k.strip().lower() == "content-length":
+                n_body = int(v)
+        if res["status"] != 200:
+            raw = (await reader.readexactly(n_body) if n_body is not None
+                   else await reader.read())
+            res["error"] = raw.decode("utf-8", "replace")
+            return res
+        event = "message"
+        while True:  # SSE event stream
+            line = await asyncio.wait_for(reader.readline(), timeout_s)
+            if not line:  # server closed without a done event
+                res["error"] = res["error"] or "stream closed early"
+                break
+            line = line.strip()
+            if not line:
+                event = "message"
+                continue
+            if line.startswith(b"event:"):
+                event = line.split(b":", 1)[1].strip().decode()
+                continue
+            if not line.startswith(b"data:"):
+                continue
+            data = json.loads(line.split(b":", 1)[1])
+            if event == "done":
+                res["finish_reason"] = data["finish_reason"]
+                res["latency_s"] = time.monotonic() - t0
+                break
+            if res["ttft_s"] is None:
+                res["ttft_s"] = time.monotonic() - t0
+            res["tokens"].append(int(data["token"]))
+            if (cancel_after_tokens is not None
+                    and len(res["tokens"]) >= cancel_after_tokens):
+                res["cancelled_by_client"] = True
+                res["latency_s"] = time.monotonic() - t0
+                break
+        return res
+    except (OSError, asyncio.TimeoutError,
+            asyncio.IncompleteReadError) as exc:
+        res["error"] = repr(exc)
+        return res
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionError, OSError):
+            pass
+
+
+# -- driving modes -----------------------------------------------------------
+
+
+async def run_closed_loop(host: str, port: int, payloads: List[dict], *,
+                          concurrency: int = 4,
+                          timeout_s: float = 60.0) -> List[dict]:
+    """Fixed-concurrency workers; results in input order."""
+    results: List[Optional[dict]] = [None] * len(payloads)
+    it = iter(range(len(payloads)))
+
+    async def worker():
+        for i in it:  # the shared iterator is the work queue
+            results[i] = await sse_generate(host, port, payloads[i],
+                                            timeout_s=timeout_s)
+
+    await asyncio.gather(*(worker() for _ in range(concurrency)))
+    return results  # type: ignore[return-value]
+
+
+async def run_open_loop(host: str, port: int, payloads: List[dict], *,
+                        rate: float = 4.0, cancel_frac: float = 0.0,
+                        seed: int = 0,
+                        timeout_s: float = 60.0) -> List[dict]:
+    """Poisson arrivals at ``rate``/s, independent of completions; a
+    ``cancel_frac`` fraction of clients disconnect after their first
+    token.  Results in submission order."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / max(rate, 1e-9), len(payloads))
+    cancels = rng.random(len(payloads)) < cancel_frac
+    tasks = []
+    for gap, payload, cancel in zip(gaps, payloads, cancels):
+        await asyncio.sleep(float(gap))
+        tasks.append(asyncio.ensure_future(sse_generate(
+            host, port, payload,
+            cancel_after_tokens=1 if cancel else None,
+            timeout_s=timeout_s)))
+    return list(await asyncio.gather(*tasks))
+
+
+def summarize(results: List[dict], wall: float) -> dict:
+    """Reduce per-request results to the benchmark/CI summary."""
+
+    def pct(vals, q):
+        return float(np.percentile(np.asarray(vals), q)) if vals else 0.0
+
+    served = [r for r in results
+              if r["status"] == 200 and not r["cancelled_by_client"]
+              and r["finish_reason"] is not None]
+    ttfts = [r["ttft_s"] for r in results if r["ttft_s"] is not None]
+    lats = [r["latency_s"] for r in served if r["latency_s"] is not None]
+    n_tok = sum(len(r["tokens"]) for r in results)
+    return {
+        "requests": len(results),
+        "served": len(served),
+        "cancelled_by_client": sum(r["cancelled_by_client"]
+                                   for r in results),
+        "rejected_429": sum(r["status"] == 429 for r in results),
+        "errors": sum(r["status"] not in (200, 429) for r in results),
+        "finish_reasons": {
+            reason: sum(r["finish_reason"] == reason for r in results)
+            for reason in sorted({r["finish_reason"] for r in results
+                                  if r["finish_reason"] is not None})},
+        "streamed_tokens": n_tok,
+        "wall_s": wall,
+        "tokens_per_s": n_tok / max(wall, 1e-9),
+        "ttft_p50_ms": pct(ttfts, 50) * 1e3,
+        "ttft_p95_ms": pct(ttfts, 95) * 1e3,
+        "latency_p50_ms": pct(lats, 50) * 1e3,
+        "latency_p95_ms": pct(lats, 95) * 1e3,
+    }
+
+
+def make_payloads(n: int, *, seed: int = 0, min_prompt: int = 4,
+                  max_prompt: int = 24, min_new: int = 4, max_new: int = 16,
+                  vocab: int = 256,
+                  timeout_s: Optional[float] = None) -> List[dict]:
+    """Reproducible random request bodies (mirrors ``make_trace`` dims
+    without needing a model)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        plen = int(rng.integers(min_prompt, max_prompt + 1))
+        payload = {
+            "prompt": rng.integers(0, vocab, plen).tolist(),
+            "max_new_tokens": int(rng.integers(min_new, max_new + 1)),
+        }
+        if timeout_s is not None:
+            payload["timeout_s"] = timeout_s
+        out.append(payload)
+    return out
+
+
+# -- CLI ---------------------------------------------------------------------
+
+
+async def _amain(args) -> int:
+    # wait for the server (CI boots it concurrently)
+    deadline = time.monotonic() + args.wait_s
+    while True:
+        try:
+            status, _ = await fetch(args.host, args.port, "/healthz")
+            if status == 200:
+                break
+        except (OSError, asyncio.TimeoutError):
+            pass
+        if time.monotonic() >= deadline:
+            print(f"server at {args.host}:{args.port} not healthy within "
+                  f"{args.wait_s}s", file=sys.stderr)
+            return 1
+        await asyncio.sleep(0.2)
+
+    payloads = make_payloads(
+        args.n_requests, seed=args.seed, max_prompt=args.max_prompt,
+        max_new=args.max_new, vocab=args.vocab,
+        timeout_s=args.request_timeout if args.request_timeout > 0
+        else None)
+    t0 = time.monotonic()
+    if args.mode == "closed":
+        results = await run_closed_loop(args.host, args.port, payloads,
+                                        concurrency=args.concurrency,
+                                        timeout_s=args.timeout_s)
+    else:
+        results = await run_open_loop(args.host, args.port, payloads,
+                                      rate=args.rate,
+                                      cancel_frac=args.cancel_frac,
+                                      seed=args.seed,
+                                      timeout_s=args.timeout_s)
+    wall = time.monotonic() - t0
+    summary = {"mode": args.mode, **summarize(results, wall)}
+
+    try:
+        status, metrics_body = await fetch(args.host, args.port, "/metrics")
+        metrics_text = metrics_body.decode("utf-8", "replace")
+        summary["metrics_scraped"] = status == 200
+    except (OSError, asyncio.TimeoutError):
+        status, metrics_text = 0, ""
+        summary["metrics_scraped"] = False
+
+    print(json.dumps(summary, indent=2))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"summary": summary, "results": results}, f, indent=2)
+
+    if args.strict:
+        problems = []
+        if not summary["metrics_scraped"]:
+            problems.append("/metrics not scrapeable")
+        for name in ("repro_serve_ttft_seconds",
+                     "repro_serve_prefix_hit_rate",
+                     "repro_serve_completions_total"):
+            if name not in metrics_text:
+                problems.append(f"metric {name} missing from /metrics")
+        if summary["errors"]:
+            problems.append(f"{summary['errors']} request(s) without a "
+                            "terminal outcome")
+        if args.cancel_frac > 0 and not summary["cancelled_by_client"]:
+            problems.append("cancel-frac > 0 but no client cancelled")
+        if summary["served"] == 0:
+            problems.append("no request was served to completion")
+        if problems:
+            print("STRICT FAILURES: " + "; ".join(problems),
+                  file=sys.stderr)
+            return 1
+    return 0
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=8000)
+    p.add_argument("--mode", choices=("closed", "open"), default="closed")
+    p.add_argument("--n-requests", type=int, default=16)
+    p.add_argument("--concurrency", type=int, default=4,
+                   help="closed loop: requests kept in flight")
+    p.add_argument("--rate", type=float, default=4.0,
+                   help="open loop: Poisson arrivals per second")
+    p.add_argument("--cancel-frac", type=float, default=0.0,
+                   help="open loop: fraction of clients that disconnect "
+                        "after their first token")
+    p.add_argument("--max-prompt", type=int, default=24)
+    p.add_argument("--max-new", type=int, default=16)
+    p.add_argument("--vocab", type=int, default=256,
+                   help="token-id range of the random prompts (must not "
+                        "exceed the served model's vocab)")
+    p.add_argument("--request-timeout", type=float, default=0.0,
+                   help="per-request deadline sent in the body "
+                        "(server cancels past it; 0 = none)")
+    p.add_argument("--timeout-s", type=float, default=60.0,
+                   help="client-side socket timeout per request")
+    p.add_argument("--wait-s", type=float, default=60.0,
+                   help="max seconds to wait for /healthz before failing")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--json", default="",
+                   help="write {summary, results} JSON here")
+    p.add_argument("--strict", action="store_true",
+                   help="exit 1 on anomalies (missing metrics, "
+                        "non-terminal requests, expected-but-absent "
+                        "cancels)")
+    args = p.parse_args(argv)
+    return asyncio.run(_amain(args))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

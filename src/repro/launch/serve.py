@@ -46,6 +46,21 @@ pallas`` is attention-paged-only and errors for them.
 printed as SSE-style ``data:`` lines the moment they land
 (``ContinuousEngine.stream()`` / ``on_token``).
 
+``--http`` boots the real network front door instead of a local replay:
+an asyncio HTTP server (``repro.serve.http``) on ``--host``/``--port``
+serving ``POST /v1/generate`` (SSE token streaming, per-request
+deadlines, client-disconnect cancellation), ``GET /metrics`` (Prometheus
+text: TTFT/latency quantiles, prefix-hit rate, KV blocks in use), and
+``GET /healthz``.  ``--max-pending`` bounds the admission queue (a full
+queue answers 429 with ``Retry-After`` — backpressure instead of
+unbounded buffering) and ``--request-timeout`` sets the default
+per-request deadline in seconds (0 = none; an expired request is
+cancelled and reported ``finish_reason="cancelled"``).  Drive it with
+``python -m repro.launch.loadgen`` (closed- and open-loop client).
+``--http`` serves the model the other flags select — including
+``--factorize`` and ``--spec-k`` variants — and ignores the trace knobs
+(clients bring the traffic).
+
 Demonstrates the paper's post-training-factorization use case end-to-end —
 ``--factorize`` SVD-factorizes the dense model *after* "training" (here:
 at init; rank ``--rank`` as a ratio of min(m, n), embed/lm_head kept
@@ -107,8 +122,10 @@ def stream_trace(model, cfg, trace, *, out=sys.stdout, **dims) -> int:
         # produce no token while prompts are mid-chunked-prefill, and timed
         # arrivals must keep flowing into the free slots regardless
         for uid, tok, comp in engine.stream(on_step=feed):
-            n_tok += 1
-            print(f"data: {json.dumps({'id': uid, 'token': tok})}", file=out)
+            if tok is not None:  # None = completion-only event (cancelled)
+                n_tok += 1
+                print(f"data: {json.dumps({'id': uid, 'token': tok})}",
+                      file=out)
             if comp is not None:
                 done = {"id": uid, "reason": comp.finish_reason,
                         "n_tokens": len(comp.tokens)}
@@ -166,6 +183,22 @@ def main(argv=None) -> int:
     p.add_argument("--stream", action="store_true",
                    help="print tokens as SSE-style data: lines as they "
                         "land instead of batch stats")
+    p.add_argument("--http", action="store_true",
+                   help="serve over HTTP instead of replaying a trace: "
+                        "POST /v1/generate (SSE streaming, deadlines, "
+                        "disconnect cancellation), GET /metrics "
+                        "(Prometheus), GET /healthz; drive with "
+                        "repro.launch.loadgen")
+    p.add_argument("--host", default="127.0.0.1",
+                   help="HTTP bind address (--http)")
+    p.add_argument("--port", type=int, default=8000,
+                   help="HTTP port; 0 picks an ephemeral one (--http)")
+    p.add_argument("--max-pending", type=int, default=64,
+                   help="admission queue bound; a full queue answers "
+                        "429 backpressure (--http)")
+    p.add_argument("--request-timeout", type=float, default=0.0,
+                   help="default per-request deadline in seconds; an "
+                        "expired request is cancelled (0 = none, --http)")
     p.add_argument("--factorize", action="store_true",
                    help="serve the auto_fact-factorized model (rank from "
                         "--rank, embed/lm_head excluded, r_max gate off so "
@@ -235,6 +268,34 @@ def main(argv=None) -> int:
             dims["n_blocks"] = args.n_blocks
         if args.prefix_retain >= 0:
             dims["prefix_retain_blocks"] = args.prefix_retain
+
+    if args.http:
+        if args.stream:
+            p.error("--http and --stream are mutually exclusive")
+        from repro.serve.http import serve as http_serve
+        serve_model = model
+        if args.factorize:
+            serve_model = auto_fact(model, args.rank, solver=args.solver,
+                                    key=jax.random.PRNGKey(1),
+                                    exclude=["embed", "lm_head"], gate=False)
+        if args.spec_k:
+            dims["draft_model"] = auto_fact(
+                serve_model, args.rank, solver=args.solver,
+                key=jax.random.PRNGKey(1),
+                exclude=["embed", "lm_head"], gate=False)
+            dims["spec_k"] = args.spec_k
+        engine = ContinuousEngine(serve_model, cfg, **dims)
+        # compile warmup, one prompt per reachable bucket width (mirrors
+        # bench_trace): the first live request must not pay the jit
+        for plen in sorted({min(w, args.max_prompt_len)
+                            for w in engine.buckets}):
+            engine.submit(np.zeros(plen, np.int32), max_new_tokens=2)
+        engine.run()
+        engine.reset_stats()
+        http_serve(engine, host=args.host, port=args.port,
+                   max_pending=args.max_pending,
+                   default_timeout_s=args.request_timeout or None)
+        return 0
 
     if args.stream:
         if args.spec_k:

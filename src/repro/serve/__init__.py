@@ -62,6 +62,15 @@ Five modules:
 * ``repro.serve.trace`` — Poisson arrival traces (optionally with a
   shared system-prompt prefix and/or a long-prompt tail), replay,
   latency + KV-memory + admission-stall stats.
+* ``repro.serve.http`` — the async HTTP front door: ``POST
+  /v1/generate`` with SSE token streaming, per-request deadlines and
+  client-disconnect **cancellation** (propagated into
+  ``ContinuousEngine.cancel`` — slot, parked frontier, and refcounted
+  paged blocks all released mid-prefill or mid-decode), a bounded
+  admission queue answering 429 backpressure, and ``GET /metrics``
+  Prometheus exposition of the engine stats.  ``BackgroundServer`` runs
+  it on a daemon thread for synchronous callers;
+  ``repro.launch.loadgen`` is the matching closed-/open-loop client.
 
 Greedy outputs are bit-identical across ``generate``, ``Engine``, both
 ``ContinuousEngine`` layouts, every cache kind, and any prefill
@@ -90,6 +99,7 @@ Quick use::
 
 from repro.nn.attention import UnsupportedCacheError
 from repro.serve.engine import ContinuousEngine, Engine, generate
+from repro.serve.http import BackgroundServer, HttpServer, ServeMetrics
 from repro.serve.paging import (BlockAllocator, PagedCacheManager,
                                 PrefixCache, chain_keys)
 from repro.serve.sampling import greedy_tokens, sample_tokens
@@ -104,4 +114,5 @@ __all__ = ["Engine", "ContinuousEngine", "generate", "Request", "Completion",
            "UnsupportedCacheError", "chain_keys", "make_trace", "replay",
            "latency_stats", "stall_stats", "format_stats", "format_kv_stats",
            "format_prefill_stats", "bench_trace", "greedy_agreement",
-           "greedy_tokens", "sample_tokens"]
+           "greedy_tokens", "sample_tokens", "HttpServer",
+           "BackgroundServer", "ServeMetrics"]

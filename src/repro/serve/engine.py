@@ -20,6 +20,7 @@ See ``repro.serve.scheduler`` for the request lifecycle,
 
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass
@@ -214,8 +215,24 @@ class ContinuousEngine:
     ``submit`` rejects ``temperature != 0`` when speculation is on.
 
     Streaming: ``stream()`` yields ``(uid, token, completion|None)`` as
-    tokens land, and ``on_token`` (callable ``(uid, token)``) fires inside
-    ``step()`` for push-style consumers.
+    tokens land (``token`` is ``None`` for a request that finished a step
+    without emitting one — cancellation, ``max_steps`` truncation), and
+    ``on_token`` (callable ``(uid, token)``) fires inside ``step()`` for
+    push-style consumers.  A raising ``on_token`` never corrupts the
+    step: the error is swallowed and recorded in ``on_token_errors``.
+
+    **Cancellation.**  ``cancel(uid)`` is thread-safe (the HTTP front
+    door calls it from the asyncio event loop while ``step()`` runs in
+    an executor thread) and takes effect at the start of the next
+    ``step()``, which returns the ``finish_reason="cancelled"``
+    :class:`Completion` like any other finish.  A pending request is
+    dropped from the queue; a mid-prefill or mid-decode request releases
+    its slot, parked write frontier, and every refcounted paged block.
+    One wrinkle: a cancelled prefill may have registered prefix blocks
+    that later admissions already hit but that its chunks never wrote —
+    those dependents are *rewound* to recompute (and publish) the
+    orphaned span themselves, so prefix sharing never deadlocks on a
+    dead writer (see :meth:`_rewind_dependents`).
     """
 
     def __init__(self, model, cfg, *, batch: int, max_len: int,
@@ -369,6 +386,11 @@ class ContinuousEngine:
         self._admit_seq = 0
         self._rr_seq = 0  # last admission seq served a chunk (rotation)
         self.on_token: Optional[Callable[[int, int], None]] = None
+        # a raising on_token must not desync host/device state mid-step:
+        # errors are recorded here (bounded) instead of propagating
+        self.on_token_errors: deque = deque(maxlen=64)
+        self._cancel_lock = threading.Lock()
+        self._cancel_uids: set = set()  # uids to cancel at next step()
         self._step_events: list = []  # (uid, token) landed this step
         # prefill accounting (prefill_stats() / benchmarks); bounded like
         # scheduler.admitted so a long-lived server cannot leak step dicts
@@ -613,14 +635,27 @@ class ContinuousEngine:
             admissible=lambda r: self.manager.can_admit(
                 r.prompt, self._total_tokens(r)))
 
-    def _finish(self, slot: int, cache_pos: int) -> Completion:
+    def _finish(self, slot: int, cache_pos: int,
+                reason: Optional[str] = None) -> Completion:
         """Evict a finished slot: classify, release its KV blocks (paged),
-        and hand the slot back to the scheduler."""
-        reason = self.scheduler.finish_reason(slot, cache_pos, self.max_len)
-        if self.manager is not None:
-            self.manager.release(slot)
-            self._table_dirty = True
+        and hand the slot back to the scheduler.  ``reason`` overrides the
+        classifier (cancellation — a cancelled request must never be
+        reported as a natural ``length``/``stop`` finish, even when the
+        cancel lands on the same step its limit would have)."""
+        if reason is None:
+            reason = self.scheduler.finish_reason(slot, cache_pos,
+                                                  self.max_len)
+        self._release_slot(slot)
         return self.scheduler.finish(slot, reason)
+
+    def _release_slot(self, slot: int) -> None:
+        """Return a slot's paged blocks and rewind any dependents its
+        orphaned (registered-but-unwritten) prefix blocks would strand."""
+        if self.manager is not None:
+            orphans = self.manager.release(slot)
+            self._table_dirty = True
+            if orphans:
+                self._rewind_dependents(orphans)
 
     def _flush_table(self) -> None:
         if self.manager is not None and self._table_dirty:
@@ -633,10 +668,108 @@ class ContinuousEngine:
                     table=jnp.asarray(self.manager.tables))
             self._table_dirty = False
 
+    # -- cancellation --------------------------------------------------------
+
+    def cancel(self, uid: int) -> bool:
+        """Request cancellation of a submitted request.
+
+        Thread-safe: may be called from any thread while ``step()`` runs
+        (the HTTP front door calls it from the event loop on client
+        disconnect and deadline expiry).  The cancel takes effect at the
+        START of the next ``step()``, which returns the request's
+        ``finish_reason="cancelled"`` :class:`Completion` alongside any
+        natural finishes — a pending request leaves the queue, a
+        prefilling or running request releases its slot, parked write
+        frontier, and paged blocks.  Returns whether the uid *looked*
+        live at call time (best-effort — the request may finish naturally
+        before the cancel drains, in which case the cancel is a no-op);
+        cancelling an unknown or finished uid is harmless."""
+        with self._cancel_lock:
+            self._cancel_uids.add(uid)
+        try:
+            state, _ = self.scheduler.find(uid)
+        except RuntimeError:  # scheduler deques mutating under step()
+            return True
+        return state is not None
+
+    def _drain_cancels(self) -> list:
+        """Apply every cancel() recorded since the last step (host-order
+        deterministic: sorted by uid)."""
+        with self._cancel_lock:
+            if not self._cancel_uids:
+                return []
+            uids, self._cancel_uids = self._cancel_uids, set()
+        out = []
+        for uid in sorted(uids):
+            comp = self._cancel_now(uid)
+            if comp is not None:
+                out.append(comp)
+        return out
+
+    def _cancel_now(self, uid: int) -> Optional[Completion]:
+        state, slot = self.scheduler.find(uid)
+        if state == "pending":
+            return self.scheduler.cancel_pending(uid)
+        if state == "prefilling":
+            # drop the host task; the slot's write frontier is already
+            # parked out of range (since _begin_prefill), so no decode
+            # write can land anywhere — just return the blocks
+            del self._prefills[slot]
+            self._release_slot(slot)
+            return self.scheduler.cancel_prefilling(slot)
+        if state == "running":
+            # freeze the lane exactly like a natural in-graph finish
+            # (inactive slots' tokens/positions stop advancing; paged
+            # writes drop into the sentinel row once the table clears),
+            # then evict with the explicit reason
+            self.state = self.state._replace(
+                active=self.state.active.at[slot].set(False))
+            pos = int(np.asarray(self.cache.length)[0, slot])
+            return self._finish(slot, pos, reason="cancelled")
+        return None  # unknown uid or already finished: no-op
+
+    def _rewind_dependents(self, orphans: Tuple[int, ...]) -> None:
+        """Un-strand prefills whose prefix-hit chain includes ``orphans``
+        — blocks a cancelled provider registered but never wrote.  Such a
+        task would wait in ``blocks_ready`` forever; instead its hit
+        boundary is rewound to the first orphan in its chain and it
+        recomputes the tail of the prefix itself — writing the SAME bytes
+        (the sha256 chain matched, so the tokens match and prefill is
+        deterministic) and publishing the blocks for anyone behind it.
+
+        Safe by construction: ``blocks_ready`` gates all-or-nothing, so a
+        task with ANY unpublished hit block has run zero chunks — nothing
+        was computed from the orphaned content, and ``consumed`` still
+        sits at the admission-time skip point.  Writing a shared pending
+        block here is the one sanctioned exception to the shared-blocks-
+        are-immutable rule: every reader is gated until publish, and the
+        rewritten content is bit-identical."""
+        orphans = set(orphans)
+        for task in self._prefills.values():
+            idx = next((i for i, b in enumerate(task.hit_bids)
+                        if b in orphans), None)
+            if idx is None:
+                continue
+            assert task.chunks == 0, "rewind of a started prefill"
+            new_cached = idx * self.block_size
+            new_start = min(new_cached, task.plen - 1)
+            # give back the skip accounting the rewound span claimed
+            self._prefix_skipped_tokens -= task.consumed - new_start
+            self.manager.prefix_hit_tokens -= task.cached - new_cached
+            task.cached = new_cached
+            task.consumed = new_start
+            task.hit_bids = task.hit_bids[:idx]
+
     def _emit(self, uid: int, token: int) -> None:
         self._step_events.append((uid, int(token)))
         if self.on_token is not None:
-            self.on_token(uid, int(token))
+            try:
+                self.on_token(uid, int(token))
+            except Exception as exc:
+                # a consumer bug must not desync host bookkeeping from
+                # device state (leaked slots/blocks, missing step_log):
+                # record and keep stepping
+                self.on_token_errors.append((uid, int(token), repr(exc)))
 
     def _bucket_width(self, n: int) -> int:
         for b in self.buckets:
@@ -769,12 +902,13 @@ class ContinuousEngine:
         return finished, spent
 
     def step(self) -> list:
-        """One scheduling round: admit, chunk prefills under the budget,
-        bind finished prefills, then one batched decode step.  Returns the
-        :class:`Completion`s finished this step."""
+        """One scheduling round: apply cancels, admit, chunk prefills
+        under the budget, bind finished prefills, then one batched decode
+        step.  Returns the :class:`Completion`s finished this step
+        (cancelled ones included)."""
         t0 = time.monotonic()
-        finished = []
         self._step_events = []
+        finished = self._drain_cancels()
         while (adm := self._next_admission()) is not None:
             self._begin_prefill(*adm)
         prefill_spent = 0
@@ -826,6 +960,13 @@ class ContinuousEngine:
 
     # -- introspection -------------------------------------------------------
 
+    @property
+    def step_events(self) -> Tuple[Tuple[int, int], ...]:
+        """``(uid, token)`` pairs emitted by the most recent ``step()`` —
+        the pull half of streaming for drivers that call ``step()``
+        directly (the HTTP pump) instead of iterating ``stream()``."""
+        return tuple(self._step_events)
+
     def kv_stats(self) -> dict:
         """HBM accounting for the KV cache (bytes, both layouts).
 
@@ -840,7 +981,20 @@ class ContinuousEngine:
         leaf (KV lanes + conv/ssm buffers), and ``kv_lane_tokens``
         reports the per-slot lane length — ``window`` for ring lanes (the
         O(window)-not-O(max_len) bound the benchmark asserts), absent for
-        pure-SSM state."""
+        pure-SSM state.
+
+        With speculative decoding on, the draft model's mirror cache is
+        real HBM too: ``draft_kv_allocated_bytes`` splits it out and
+        every aggregate number includes it.  In the paged layout the
+        draft shares the verifier's block tables, so one block 'in use'
+        pins rows in BOTH pools — per-block bytes cover the two pools
+        together."""
+
+        def _leaf_bytes(cache):
+            return sum(a.size * a.dtype.itemsize
+                       for f, a in zip(cache._fields, cache)
+                       if f not in ("length", "table"))
+
         if self.manager is None:
             leaves = {f: a for f, a in zip(self.cache._fields, self.cache)
                       if f not in ("length", "table")}
@@ -849,6 +1003,11 @@ class ContinuousEngine:
                      "cache_kind": self.cache_kind,
                      "kv_allocated_bytes": alloc,
                      "kv_peak_resident_bytes": alloc}
+            if self.draft_cache is not None:
+                dalloc = _leaf_bytes(self.draft_cache)
+                stats["draft_kv_allocated_bytes"] = dalloc
+                stats["kv_allocated_bytes"] += dalloc
+                stats["kv_peak_resident_bytes"] += dalloc
             if "k" in leaves:  # per-slot KV lanes (dense or ring)
                 k = leaves["k"]
                 stats["kv_lane_tokens"] = k.shape[2]
@@ -858,16 +1017,26 @@ class ContinuousEngine:
         alloc = 2 * self.cache.k.size * self.cache.k.dtype.itemsize
         block_bytes = 2 * (self.cache.k.size // self.n_blocks
                            ) * self.cache.k.dtype.itemsize
+        stats = {"kv_layout": "paged", "cache_kind": self.cache_kind}
+        if self.draft_cache is not None:
+            dalloc = (2 * self.draft_cache.k.size
+                      * self.draft_cache.k.dtype.itemsize)
+            stats["draft_kv_allocated_bytes"] = dalloc
+            alloc += dalloc
+            block_bytes += 2 * (self.draft_cache.k.size // self.n_blocks
+                                ) * self.draft_cache.k.dtype.itemsize
         a = self.manager.allocator
-        return {"kv_layout": "paged", "cache_kind": self.cache_kind,
-                "kv_allocated_bytes": alloc,
-                "kv_peak_resident_bytes": a.peak_in_use * block_bytes,
-                "block_size": self.block_size, "n_blocks": self.n_blocks,
-                "peak_blocks_in_use": a.peak_in_use,
-                "blocks_in_use": a.n_in_use,
-                "blocks_retained": len(self.manager.retained),
-                "prefix_hit_tokens": self.manager.prefix_hit_tokens,
-                "decode_kernel": self.decode_kernel}
+        stats.update({
+            "kv_allocated_bytes": alloc,
+            "kv_peak_resident_bytes": a.peak_in_use * block_bytes,
+            "kv_block_bytes": block_bytes,
+            "block_size": self.block_size, "n_blocks": self.n_blocks,
+            "peak_blocks_in_use": a.peak_in_use,
+            "blocks_in_use": a.n_in_use,
+            "blocks_retained": len(self.manager.retained),
+            "prefix_hit_tokens": self.manager.prefix_hit_tokens,
+            "decode_kernel": self.decode_kernel})
+        return stats
 
     def prefill_stats(self) -> dict:
         """Admission-path accounting: how much prompt compute actually ran
@@ -940,12 +1109,16 @@ class ContinuousEngine:
                ) -> Iterator[Tuple[int, int, Optional[Completion]]]:
         """Drive the engine and yield ``(uid, token, completion)`` as
         tokens land — ``completion`` rides with a request's LAST token (and
-        is ``None`` before that).  Submit more requests between yields, or
-        from ``on_step`` (called after EVERY engine step) — a step may
-        yield no token at all while prompts are mid-chunked-prefill, so a
-        driver feeding timed arrivals must use the hook, not the yield
-        points, or a long prefill starves the queue.  The stream drains
-        when the scheduler goes idle."""
+        is ``None`` before that).  A request that finishes a step WITHOUT
+        emitting a token — cancelled, or cut off by ``max_steps`` — still
+        surfaces: its completion is yielded as ``(uid, None, completion)``
+        after the step's token events, so no Completion is ever silently
+        dropped.  Submit more requests between yields, or from ``on_step``
+        (called after EVERY engine step) — a step may yield no token at
+        all while prompts are mid-chunked-prefill, so a driver feeding
+        timed arrivals must use the hook, not the yield points, or a long
+        prefill starves the queue.  The stream drains when the scheduler
+        goes idle."""
         steps = 0
         while not self.scheduler.idle:
             done = {c.uid: c for c in self.step()}
@@ -954,8 +1127,10 @@ class ContinuousEngine:
                 on_step(self)
             last = {uid: i for i, (uid, _) in enumerate(events)}
             for i, (uid, tok) in enumerate(events):
-                comp = done.get(uid) if last[uid] == i else None
+                comp = done.pop(uid, None) if last[uid] == i else None
                 yield uid, tok, comp
+            for uid, comp in done.items():  # completion-only events
+                yield uid, None, comp
             steps += 1
             if max_steps is not None and steps >= max_steps:
                 break

@@ -338,12 +338,24 @@ class PagedCacheManager:
 
     # -- release --------------------------------------------------------------
 
-    def release(self, slot: int) -> None:
+    def release(self, slot: int) -> Tuple[int, ...]:
         """Return a finished slot's references.  A prefix block whose last
         reference drops is parked on the retention LRU (content kept warm
         for future hits) while the budget allows; everything else — and the
         LRU overflow — recycles to the free list, evicting dead prefix
-        entries."""
+        entries.
+
+        Returns the slot's **orphaned pending blocks**: blocks this slot
+        registered but never wrote (still ``_pending``) that other slots
+        still reference.  For a normally-finished slot this is always
+        empty (a slot binds only after publishing every registered block),
+        but a prefill **cancelled** mid-flight can strand dependents that
+        forked its registered-but-unwritten blocks — if nothing rewinds
+        them, ``blocks_ready`` never turns true and they wait forever.
+        The engine hands orphans to the waiting tasks, which adopt the
+        writer role (the prefix tokens are identical, so the rewritten
+        bytes are too)."""
+        orphans = []
         for bid in self._owned.pop(slot):
             retain = (self.retain_blocks > 0
                       and self.allocator.refcount[bid] == 1
@@ -360,7 +372,10 @@ class PagedCacheManager:
             elif self.allocator.free(bid) == 0:
                 self.prefix.drop_block(bid)
                 self._pending.discard(bid)
+            elif bid in self._pending:
+                orphans.append(bid)
         self.tables[slot] = self.sentinel
+        return tuple(orphans)
 
     @property
     def fully_free(self) -> bool:

@@ -17,10 +17,19 @@ offered to ``next_admission``) but not decoded (absent from
 ``running_slots``).  Slots are recycled: the moment a request finishes,
 its slot is handed to the next pending request without touching the
 other in-flight rows.
+
+A request can be **cancelled** in any live state (the HTTP front door
+does this on client disconnect and deadline expiry): ``find`` locates
+the uid, ``cancel_pending``/``cancel_prefilling`` evict un-bound
+requests with a ``finish_reason="cancelled"`` completion, and a running
+slot goes through the ordinary ``finish`` with the explicit
+``"cancelled"`` reason — the engine owns releasing the device-side slot
+state and paged blocks in each case.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import time
 from collections import deque
@@ -53,12 +62,16 @@ class Request:
 
 @dataclass
 class Completion:
-    """A finished request: generated tokens + lifecycle timestamps."""
+    """A finished request: generated tokens + lifecycle timestamps.
+
+    ``first_token_at`` is 0.0 for a request cancelled before its first
+    token landed (``ttft`` is meaningless there — stats reducers skip
+    such completions)."""
 
     uid: int
     prompt_len: int
     tokens: list  # generated ids, including the stop token if one fired
-    finish_reason: str  # 'stop' | 'length' | 'cache_full'
+    finish_reason: str  # 'stop' | 'length' | 'cache_full' | 'cancelled'
     submitted_at: float = 0.0
     first_token_at: float = 0.0
     finished_at: float = 0.0
@@ -91,11 +104,29 @@ class Scheduler:
         self.prefilling: dict = {}  # slot -> Request (admitted, not bound)
         # bounded admission log (uids, FIFO order) for tests/introspection
         self.admitted: deque = deque(maxlen=1024)
+        # every uid this scheduler has accepted, for duplicate detection
+        # (a set of ints — cheap even for very long-lived servers)
+        self._seen_uids: set = set()
 
     # -- queue ---------------------------------------------------------------
 
     def submit(self, request: Request) -> int:
+        """Queue a request; returns the uid admission/completion will carry.
+
+        The scheduler works on a private copy: stamping ``submitted_at``
+        on the caller's object made a re-used :class:`Request` carry a
+        stale timestamp, and resubmitting the same object reused its uid
+        — colliding in every per-uid map downstream (``stream()``'s
+        per-step event maps, the HTTP front door's response routing).  A
+        uid this scheduler has already accepted is re-issued fresh, so
+        the returned uid is always unique within this scheduler."""
+        if request.uid in self._seen_uids:
+            request = dataclasses.replace(request,
+                                          uid=next(_uid_counter))
+        else:
+            request = dataclasses.replace(request)
         request.submitted_at = time.monotonic()
+        self._seen_uids.add(request.uid)
         self.pending.append(request)
         return request.uid
 
@@ -143,6 +174,48 @@ class Scheduler:
         if admissible is not None and not admissible(self.pending[0]):
             return None
         return slot, self.pending.popleft()
+
+    # -- cancellation --------------------------------------------------------
+
+    def find(self, uid: int) -> Tuple[Optional[str], Optional[int]]:
+        """Locate a live uid: ``("pending"|"prefilling"|"running", slot)``
+        (slot is None for pending), or ``(None, None)`` when the uid is
+        unknown or already finished."""
+        for r in self.pending:
+            if r.uid == uid:
+                return "pending", None
+        for slot, r in self.prefilling.items():
+            if r.uid == uid:
+                return "prefilling", slot
+        for slot, s in enumerate(self.slots):
+            if s is not None and s.request.uid == uid:
+                return "running", slot
+        return None, None
+
+    def _cancelled(self, request: Request) -> Completion:
+        return Completion(
+            uid=request.uid,
+            prompt_len=int(request.prompt.size),
+            tokens=[],
+            finish_reason="cancelled",
+            submitted_at=request.submitted_at,
+            first_token_at=0.0,  # never produced one
+            finished_at=time.monotonic(),
+        )
+
+    def cancel_pending(self, uid: int) -> Optional[Completion]:
+        """Drop a still-queued request; returns its 'cancelled' Completion
+        (no tokens), or None if the uid is not pending."""
+        for i, r in enumerate(self.pending):
+            if r.uid == uid:
+                del self.pending[i]
+                return self._cancelled(r)
+        return None
+
+    def cancel_prefilling(self, slot: int) -> Completion:
+        """Evict a mid-prefill slot (engine releases its device state and
+        blocks separately); returns the 'cancelled' Completion."""
+        return self._cancelled(self.prefilling.pop(slot))
 
     # -- per-slot lifecycle --------------------------------------------------
 

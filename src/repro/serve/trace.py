@@ -84,7 +84,10 @@ def latency_stats(completions: List[Completion], wall: float) -> dict:
                 "latency_p95_ms": 0.0, "ttft_p50_ms": 0.0,
                 "ttft_p95_ms": 0.0}
     lats = np.array([c.latency for c in completions])
-    ttfts = np.array([c.ttft for c in completions])
+    # a request cancelled before its first token has first_token_at == 0.0
+    # — its "ttft" would be a huge negative epoch delta, not a latency
+    ttfts = np.array([c.ttft for c in completions if c.first_token_at > 0]
+                     or [0.0])
     n_tok = int(sum(len(c.tokens) for c in completions))
     return {
         "requests": len(completions),
@@ -151,11 +154,20 @@ def bench_trace(model, cfg, trace: List[Tuple[float, Request]], *,
 
 def greedy_agreement(a: List[Completion], b: List[Completion]) -> float:
     """Mean per-request token agreement between two replays of one trace
-    (compared over the common prefix when lengths differ)."""
-    pairs = [(np.array(ca.tokens), np.array(cb.tokens))
-             for ca, cb in zip(a, b)]
-    return float(np.mean([np.mean(ta[:len(tb)] == tb[:len(ta)])
-                          for ta, tb in pairs]))
+    (compared over the common prefix when lengths differ).
+
+    Pairs with no overlapping tokens — e.g. one side cancelled before its
+    first token — carry no evidence either way and are skipped rather
+    than poisoning the mean with NaN; with no comparable pair at all the
+    agreement is vacuously 1.0."""
+    scores = []
+    for ca, cb in zip(a, b):
+        n = min(len(ca.tokens), len(cb.tokens))
+        if n == 0:
+            continue
+        ta, tb = np.array(ca.tokens[:n]), np.array(cb.tokens[:n])
+        scores.append(np.mean(ta == tb))
+    return float(np.mean(scores)) if scores else 1.0
 
 
 def format_stats(label: str, stats: dict) -> str:
@@ -176,6 +188,9 @@ def format_kv_stats(label: str, stats: dict) -> str:
         extra = (f"   ({stats['peak_blocks_in_use']}/{stats['n_blocks']} "
                  f"blocks x {stats['block_size']} tok, "
                  f"{stats['prefix_hit_tokens']} prefix-hit tok)")
+    if "draft_kv_allocated_bytes" in stats:  # speculative draft pool
+        extra += (f"   (+draft "
+                  f"{stats['draft_kv_allocated_bytes'] / 1024:.1f} KiB)")
     elif kind != "kv":  # per-slot ring / ssm / hybrid state
         layout = kind
         if "kv_lane_tokens" in stats:

@@ -308,3 +308,25 @@ def test_vector_length_requires_per_slot_cache(setup):
     with pytest.raises(ValueError):
         model.prefill(jnp.zeros((3, 8), jnp.int32), cache,
                       length=jnp.asarray([3, 7, 5]))
+
+
+def test_submit_copies_request_and_reuids_duplicates():
+    """``submit`` must not mutate the caller's Request (stamping
+    ``submitted_at`` on it made a re-used object carry a stale
+    timestamp), and resubmitting the same object must mint a fresh uid —
+    a reused uid collided in every per-uid map downstream (stream event
+    maps, HTTP response routing)."""
+    sched = Scheduler(n_slots=2)
+    req = Request(prompt=np.arange(4, dtype=np.int32), max_new_tokens=3)
+    orig_uid = req.uid
+    uid1 = sched.submit(req)
+    assert req.submitted_at == 0.0          # caller's object untouched
+    assert uid1 == orig_uid                 # first submit keeps the uid
+    assert sched.pending[-1] is not req     # queued object is a copy
+    assert sched.pending[-1].submitted_at > 0.0
+
+    uid2 = sched.submit(req)                # same object again
+    assert uid2 != uid1                     # fresh uid, no collision
+    assert req.uid == orig_uid              # still not mutated
+    assert sched.n_pending == 2
+    assert len({r.uid for r in sched.pending}) == 2

@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models import build_model
@@ -205,3 +206,79 @@ def test_paged_kv_resident_bytes_below_dense_allocation(key):
     assert pstats["peak_blocks_in_use"] <= 4
     assert pstats["kv_peak_resident_bytes"] * 2 <= \
         dstats["kv_allocated_bytes"]
+
+
+def test_on_token_error_does_not_desync_engine(key):
+    """A raising ``on_token`` consumer must not corrupt host bookkeeping:
+    the run still completes with the exact same tokens as a clean run,
+    the error is recorded in ``on_token_errors``, and the paged pool
+    drains back to empty."""
+    from repro.serve import ContinuousEngine
+
+    cfg = get_config("paper-tiny").reduced()
+    model = build_model(key, cfg)
+    dims = dict(batch=2, max_len=32, max_prompt_len=8, block_size=8)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+               for n in (5, 3, 7)]
+
+    clean = ContinuousEngine(model, cfg, **dims)
+    for p in prompts:
+        clean.submit(p, max_new_tokens=4)
+    want = [c.tokens for c in sorted(clean.run(), key=lambda c: c.uid)]
+
+    def boom(uid, tok):
+        raise RuntimeError("consumer bug")
+
+    eng = ContinuousEngine(model, cfg, **dims)
+    eng.on_token = boom
+    for p in prompts:
+        eng.submit(p, max_new_tokens=4)
+    done = sorted(eng.run(), key=lambda c: c.uid)
+    assert [c.tokens for c in done] == want
+    assert all(c.finish_reason in ("stop", "length") for c in done)
+    # one recorded error per emitted token, none swallowed silently
+    assert len(eng.on_token_errors) == sum(len(c.tokens) for c in done)
+    uid_tok = [(u, t) for u, t, _ in eng.on_token_errors]
+    assert sorted(uid_tok) == sorted(
+        (c.uid, t) for c in done for t in c.tokens)
+    assert all("consumer bug" in msg for _, _, msg in eng.on_token_errors)
+    assert eng.manager.fully_free  # no leaked blocks
+
+
+def test_greedy_agreement_skips_empty_pairs():
+    """Pairs with no overlapping tokens (e.g. one side cancelled before
+    its first token) carry no evidence and must be skipped — previously
+    an empty pair produced a NaN that poisoned the mean."""
+    from repro.serve import Completion, greedy_agreement
+
+    def comp(tokens):
+        return Completion(uid=0, prompt_len=4, tokens=list(tokens),
+                          finish_reason="stop")
+
+    a = [comp([1, 2, 3]), comp([]), comp([5, 6])]
+    b = [comp([1, 2, 9]), comp([4, 4]), comp([5, 6, 7])]
+    score = greedy_agreement(a, b)
+    assert not np.isnan(score)
+    # pair 0 agrees 2/3, pair 1 skipped, pair 2 agrees 2/2
+    assert score == pytest.approx((2 / 3 + 1.0) / 2)
+    # all-empty traces: vacuous agreement, not NaN
+    assert greedy_agreement([comp([])], [comp([1])]) == 1.0
+    assert greedy_agreement([], []) == 1.0
+
+
+def test_latency_stats_skips_cancelled_before_first_token():
+    """TTFT over completions cancelled before their first token
+    (``first_token_at == 0.0``) is meaningless; the reducer must not
+    fold huge negative values into the percentiles."""
+    from repro.serve import Completion, latency_stats
+
+    served = Completion(uid=1, prompt_len=4, tokens=[1, 2],
+                        finish_reason="length", submitted_at=10.0,
+                        first_token_at=10.5, finished_at=11.0)
+    killed = Completion(uid=2, prompt_len=4, tokens=[],
+                        finish_reason="cancelled", submitted_at=10.0,
+                        first_token_at=0.0, finished_at=10.2)
+    stats = latency_stats([served, killed], wall=2.0)
+    assert stats["ttft_p50_ms"] == pytest.approx(500.0)
+    assert stats["ttft_p50_ms"] >= 0.0

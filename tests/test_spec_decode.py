@@ -26,7 +26,8 @@ from _hyp import given, settings, st
 from repro.configs import get_config
 from repro.core import auto_fact, spectral_decay
 from repro.models import build_model
-from repro.serve import ContinuousEngine, generate, make_trace, replay
+from repro.serve import (ContinuousEngine, format_kv_stats, generate,
+                         make_trace, replay)
 from repro.serve.engine import UnsupportedCacheError
 
 EXCLUDE = ["embed", "lm_head"]
@@ -300,3 +301,47 @@ def test_multitoken_decode_ring_raises(shaped):
     _, c = model.prefill(jnp.zeros((1, 4), jnp.int32), c)
     with pytest.raises(NotImplementedError):
         model.decode(jnp.zeros((1, 2), jnp.int32), c)
+
+
+# ---- KV accounting with the draft's mirror cache ----------------------------
+
+
+@pytest.mark.parametrize("layout", ["paged", "dense"])
+def test_kv_stats_includes_draft_pool(shaped, draft, layout):
+    """The draft model's mirror cache is real HBM: ``kv_stats`` must fold
+    it into the aggregates and split it out as
+    ``draft_kv_allocated_bytes`` — previously the draft pool was
+    invisible, underreporting KV HBM by ~2x for a same-shape draft."""
+    model, cfg = shaped
+    plain = _engine(model, cfg, batch=2, kv_layout=layout)
+    spec = _engine(model, cfg, batch=2, kv_layout=layout,
+                   draft_model=draft, spec_k=2)
+    base = plain.kv_stats()
+    s = spec.kv_stats()
+    assert "draft_kv_allocated_bytes" not in base
+    dalloc = s["draft_kv_allocated_bytes"]
+    assert dalloc > 0
+    # the draft mirrors the verifier's geometry (same layers/heads/dims
+    # in this factorization), so the split-out pool matches the base pool
+    # and the aggregate is exactly base + draft
+    assert s["kv_allocated_bytes"] == base["kv_allocated_bytes"] + dalloc
+    if layout == "paged":
+        # shared tables: one in-use block pins rows in both pools
+        assert s["kv_block_bytes"] == 2 * base["kv_block_bytes"]
+    fmt = format_kv_stats("spec", s)
+    assert "draft" in fmt
+
+
+def test_kv_stats_draft_counted_in_peak_resident(shaped, draft):
+    """Peak-resident tracking must also see the draft pool: after a run,
+    the paged peak with spec on is at least double the per-block cost of
+    the same blocks without the draft."""
+    model, cfg = shaped
+    eng = _engine(model, cfg, batch=2, draft_model=draft, spec_k=2)
+    for p in _prompts([8, 12], cfg.vocab, seed=9):
+        eng.submit(p, max_new_tokens=6)
+    eng.run()
+    s = eng.kv_stats()
+    assert s["kv_peak_resident_bytes"] \
+        == s["peak_blocks_in_use"] * s["kv_block_bytes"]
+    assert s["kv_peak_resident_bytes"] > 0

@@ -1,0 +1,168 @@
+"""Gate the perf trajectory in ``BENCH_history.jsonl``.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --history BENCH_history.jsonl \
+        --thresholds benchmarks/thresholds.json
+
+Reads the append-only JSONL of microbench cells (see
+``repro.launch.microbench``), groups them by **series** — (metric,
+variant, sweep axes) **and provenance signature** (backend,
+interpret_mode, compiled_backend) — and compares each series' newest
+cell against the best prior cell *of the same series*.  Cells with
+different provenance are never compared: an interpret-mode CPU timing
+vs a compiled TPU timing is a category error, not a regression (the
+exact mislabeling that made ``decode_step_ms.paged_pallas_fused`` in
+the old BENCH_serve.json read as a 5x slowdown).
+
+Threshold rules (``benchmarks/thresholds.json``) match series by glob
+on ``metric/variant`` and come in three kinds:
+
+* ``timing``      — newest ``mean_ms`` may exceed the best prior
+                    ``mean_ms`` by at most ``max_regression_pct``.
+                    Violations are WARN-only unless the cell was
+                    actually compiled for hardware
+                    (``compiled_backend`` non-null): CPU/interpret
+                    timings on shared CI runners are too noisy to
+                    block a merge, compiled timings are not.
+* ``correctness`` — newest ``value`` must be ``<= max_value``
+                    (kernel-vs-oracle parity).  Always hard-fails.
+* ``count``       — newest ``value`` must be ``>= min_value`` (a
+                    benchmarked path disappearing from the sweep).
+                    Always hard-fails.
+
+Exit status 1 iff any hard failure.  ``check()`` is importable for the
+unit test in ``tests/test_bench_history.py``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import sys
+from typing import Iterable, Optional
+
+
+def load_history(path: str) -> list[dict]:
+    cells = []
+    with open(path) as fh:
+        for ln, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                cells.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                raise SystemExit(f"{path}:{ln}: not valid JSON ({e})")
+    return cells
+
+
+def load_thresholds(path: str) -> list[dict]:
+    with open(path) as fh:
+        rules = json.load(fh)
+    for r in rules:
+        if r.get("kind") not in ("timing", "correctness", "count"):
+            raise SystemExit(f"threshold rule {r!r}: unknown kind")
+    return rules
+
+
+def _series_key(cell: dict) -> str:
+    from repro.launch.microbench import cell_key
+
+    return cell_key(cell)
+
+
+def provenance_sig(cell: dict) -> tuple:
+    p = cell.get("provenance", {})
+    return (p.get("backend"), p.get("interpret_mode"),
+            p.get("compiled_backend"))
+
+
+def _rule_for(rules: list[dict], metric_variant: str) -> Optional[dict]:
+    for r in rules:
+        if fnmatch.fnmatch(metric_variant, r["pattern"]):
+            return r
+    return None
+
+
+def check(cells: Iterable[dict], rules: list[dict]
+          ) -> tuple[list[str], list[str]]:
+    """Returns (hard_failures, warnings), each a list of messages.
+
+    History order matters: the LAST cell of each series is "newest" and
+    is judged against the best (timing) prior cell of that series.  A
+    series with no prior cell establishes its baseline silently.
+    """
+    series: dict[tuple, list[dict]] = {}
+    for cell in cells:
+        key = (_series_key(cell), provenance_sig(cell))
+        series.setdefault(key, []).append(cell)
+
+    failures: list[str] = []
+    warnings: list[str] = []
+    for (skey, sig), run in series.items():
+        newest = run[-1]
+        mv = f"{newest['metric']}/{newest['variant']}"
+        rule = _rule_for(rules, mv)
+        if rule is None:
+            continue
+        tag = (sig[2] or f"{sig[0]}+interpret")
+        if rule["kind"] == "correctness":
+            value = newest["stats"]["value"]
+            if value > rule["max_value"]:
+                failures.append(
+                    f"CORRECTNESS {skey} [{tag}]: {value:g} > "
+                    f"max {rule['max_value']:g}")
+        elif rule["kind"] == "count":
+            value = newest["stats"]["value"]
+            if value < rule["min_value"]:
+                failures.append(
+                    f"COUNT {skey} [{tag}]: {value:g} < "
+                    f"min {rule['min_value']:g} — a benchmarked path "
+                    f"disappeared from the sweep")
+        else:  # timing
+            prior = [c for c in run[:-1] if "mean_ms" in c["stats"]]
+            if not prior or "mean_ms" not in newest["stats"]:
+                continue  # first cell of the series: becomes baseline
+            base = min(c["stats"]["mean_ms"] for c in prior)
+            now = newest["stats"]["mean_ms"]
+            limit = base * (1 + rule["max_regression_pct"] / 100.0)
+            if now > limit:
+                pct = (now / base - 1) * 100
+                msg = (f"TIMING {skey} [{tag}]: {now:.3f} ms vs "
+                       f"baseline {base:.3f} ms (+{pct:.0f}%, allowed "
+                       f"+{rule['max_regression_pct']:.0f}%)")
+                # Only compiled-for-hardware timings block the merge;
+                # CPU/interpret numbers on shared runners warn.
+                if sig[2] is not None:
+                    failures.append(msg)
+                else:
+                    warnings.append(msg + "  [warn-only: not compiled "
+                                    "for hardware]")
+    return failures, warnings
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    p.add_argument("--history", default="BENCH_history.jsonl")
+    p.add_argument("--thresholds", default="benchmarks/thresholds.json")
+    args = p.parse_args(argv)
+    cells = load_history(args.history)
+    rules = load_thresholds(args.thresholds)
+    failures, warnings = check(cells, rules)
+    n_series = len({(_series_key(c), provenance_sig(c)) for c in cells})
+    print(f"checked {len(cells)} cells across {n_series} series "
+          f"({len(rules)} threshold rules)")
+    for w in warnings:
+        print(f"  WARN {w}")
+    for f in failures:
+        print(f"  FAIL {f}")
+    if failures:
+        print(f"{len(failures)} hard failure(s)")
+        return 1
+    print("perf trajectory OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,4 +1,5 @@
-"""Shared benchmark helpers: timed training/eval on the synthetic tasks."""
+"""Shared benchmark helpers: timed training/eval on the synthetic tasks,
+plus the provenance stamp every emitted perf number must carry."""
 
 from __future__ import annotations
 
@@ -12,6 +13,36 @@ from repro.data import icl_batch, markov_lm_batch
 from repro.models import build_model
 from repro.optim import AdamW, linear_warmup_cosine
 from repro.train import TrainState, make_train_step, make_eval_step
+
+# canonical provenance stamp + comparability predicate — one definition,
+# shared by the microbench harness, the serving benchmark, and the gate
+from repro.launch.microbench import comparable, provenance  # noqa: F401
+
+
+def timing_cell(ms: float, prov: dict | None = None, **extra) -> dict:
+    """A provenance-stamped timing: ``{"ms": ..., "backend": ...,
+    "compiled_backend": ..., "interpret_mode": ...}``.  Bare floats in
+    benchmark summaries are how an interpret-mode 5x "slowdown" ends up
+    mislabeled as a real perf number — always emit through this."""
+    return {"ms": ms, **(prov if prov is not None else provenance()),
+            **extra}
+
+
+def assert_comparable(a: dict, b: dict) -> None:
+    """Refuse to compare timings across provenance mismatches."""
+    if not comparable(a, b):
+        keys = ("backend", "interpret_mode", "compiled_backend")
+        raise ValueError(
+            "refusing to compare timings with mismatched provenance: "
+            + " vs ".join(str({k: c.get(k) for k in keys})
+                          for c in (a, b)))
+
+
+def speedup(baseline: dict, candidate: dict) -> float:
+    """baseline_ms / candidate_ms, but only within one provenance —
+    raises ValueError on a cross-provenance comparison."""
+    assert_comparable(baseline, candidate)
+    return baseline["ms"] / candidate["ms"]
 
 
 def tiny_cfg(**overrides):

@@ -1,0 +1,20 @@
+"""Kernel microbenchmark CLI — thin wrapper over
+``repro.launch.microbench`` (kept in ``benchmarks/`` so the perf suite
+lives in one place alongside its gate).
+
+    PYTHONPATH=src python -m benchmarks.microbench_kernels --smoke \
+        --history BENCH_history.jsonl
+    PYTHONPATH=src python -m benchmarks.check_regression
+
+Per-step decode and per-chunk prefill timings (compile/warmup separated
+from steady state), raw kernel timings vs their jnp oracles, and
+kernel-vs-oracle parity cells, swept over (batch, seq, block_size,
+heads).  Every cell carries explicit ``compiled_backend`` /
+``interpret_mode`` provenance; appended cells form the perf trajectory
+``benchmarks/check_regression.py`` gates in CI.
+"""
+
+from repro.launch.microbench import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,6 +8,7 @@ the full per-figure tables.  Figures:
   fig2-center post-training factorization  (benchmarks/fig2_posttrain.py)
   fig2-right  in-context-learning fact.    (benchmarks/fig2_icl.py)
   speed       LED vs dense micro-bench     (benchmarks/speed_led.py)
+  microbench  kernel/decode/prefill sweep  (benchmarks/microbench_kernels.py)
   roofline    dry-run roofline table       (artifacts/dryrun/*.json)
 """
 
@@ -75,6 +76,19 @@ def main() -> None:
                          r["led_us"],
                          f"speedup={r['speedup']:.2f};"
                          f"theory={r['theory_speedup']:.2f}"))
+
+    _section("microbench: kernel / decode-step / prefill-chunk sweep")
+    from repro.launch.microbench import cell_key, format_cell, run_sweep
+
+    cells = run_sweep(smoke=fast, iters=5 if fast else 20)
+    for c in cells:
+        print(format_cell(c))
+        if "mean_ms" in c["stats"]:
+            csv_rows.append((f"microbench/{cell_key(c)}",
+                             c["stats"]["mean_ms"] * 1e3,
+                             f"compile_ms={c['stats']['compile_ms']:.0f};"
+                             f"compiled_backend="
+                             f"{c['provenance']['compiled_backend']}"))
 
     _section("roofline: dry-run artifacts (single-pod)")
     try:

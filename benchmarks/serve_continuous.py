@@ -93,6 +93,11 @@ from repro.serve import (ContinuousEngine, bench_trace, format_kv_stats,
                          format_prefill_stats, format_stats, generate,
                          greedy_agreement, make_trace)
 
+try:  # repo root on sys.path (python -m benchmarks.serve_continuous)
+    from benchmarks.common import speedup, timing_cell
+except ImportError:  # bare script: benchmarks/ itself is sys.path[0]
+    from common import speedup, timing_cell
+
 
 def decode_step_ms(model, cfg, *, batch, max_len, max_prompt_len,
                    block_size, decode_kernel, iters=20, warmup=3) -> float:
@@ -406,17 +411,23 @@ def run(*, smoke: bool = False, fact_rank: float = 0.5, solver: str = "svd",
     print("hymba ring+ssm replay: greedy tokens identical to generate")
 
     # decode-step microbenchmark: the gather-vs-fused number BENCH_serve
-    # tracks (interpret mode on CPU — overhead parity, not the TPU win)
+    # tracks.  Cells carry explicit provenance (compiled_backend is null
+    # in interpret mode) so an interpret-mode "5x slowdown" can never
+    # read as a real perf number, and the speedup below REFUSES to
+    # compare across provenance mismatches.  The full sweep lives in
+    # benchmarks/microbench_kernels.py -> BENCH_history.jsonl.
     step_dims = dict(batch=batch, max_len=max_len, max_prompt_len=max_prompt,
                      block_size=block_size, iters=step_iters)
-    gather_ms = decode_step_ms(model, cfg, decode_kernel="reference",
-                               **step_dims)
-    fused_ms = decode_step_ms(model, cfg, decode_kernel="pallas",
-                              **step_dims)
+    gather_cell = timing_cell(decode_step_ms(
+        model, cfg, decode_kernel="reference", **step_dims))
+    fused_cell = timing_cell(decode_step_ms(
+        model, cfg, decode_kernel="pallas", **step_dims))
     backend = jax.default_backend()
+    tag = gather_cell["compiled_backend"] or f"{backend}+interpret"
     print(f"decode step ({batch} slots, max_len {max_len}): "
-          f"gather {gather_ms:.2f} ms vs fused {fused_ms:.2f} ms "
-          f"[{backend}{'' if backend == 'tpu' else ', interpret'}]")
+          f"gather {gather_cell['ms']:.2f} ms vs fused "
+          f"{fused_cell['ms']:.2f} ms "
+          f"({speedup(gather_cell, fused_cell):.2f}x) [{tag}]")
 
     # ---- rank frontier: quality vs compression of the served model ---------
     ratios = sorted({0.25, 0.5, 0.75, fact_rank})
@@ -506,8 +517,10 @@ def run(*, smoke: bool = False, fact_rank: float = 0.5, solver: str = "svd",
                  "n_requests": n_requests, "chunk_size": chunk,
                  "prefill_chunk_budget": budget,
                  "long_prompt": long_prompt, "long_frac": long_frac},
-        "decode_step_ms": {"paged_gather": gather_ms,
-                           "paged_pallas_fused": fused_ms},
+        # provenance-stamped cells, NOT bare floats: compiled_backend is
+        # null when these numbers measured the Pallas interpreter
+        "decode_step_ms": {"paged_gather": gather_cell,
+                           "paged_pallas_fused": fused_cell},
         "kv_resident_reduction_x": reduction,
         "paged_vs_dense_tokens_identical": True,    # asserted above
         "fused_vs_gather_tokens_identical": True,   # asserted above

@@ -35,7 +35,9 @@ Wraps the production serve driver (``repro.launch.serve``), so every
 engine knob threads straight through: ``--kv-layout`` / ``--block-size`` /
 ``--n-blocks`` pick the KV layout, ``--decode-kernel`` picks the paged
 decode attention (``reference`` dense gather vs the fused ``pallas``
-paged-attention kernel), ``--chunk-size`` / ``--buckets`` /
+paged-attention kernel), ``--prefill-kernel`` picks the chunked-prefill
+attention on either layout (``reference`` vs the flash ``pallas``
+prefill-chunk kernel), ``--chunk-size`` / ``--buckets`` /
 ``--prefill-budget`` shape the admission pipeline, ``--shared-prefix`` /
 ``--no-prefix-reuse`` / ``--prefix-retain`` exercise the prefix cache,
 and ``--long-frac`` / ``--long-prompt`` mix a heavy prompt tail into the

@@ -28,7 +28,11 @@ for comparison; both layouts produce bit-identical greedy tokens.
 ``--decode-kernel pallas`` swaps the paged decode attention from the
 dense-gather reference to the fused Pallas kernel
 (``repro.kernels.paged_attention`` — interpret mode off-TPU; greedy
-tokens stay bit-identical).  ``--shared-prefix N`` gives every prompt one
+tokens stay bit-identical).  ``--prefill-kernel pallas`` does the same
+for the chunked-prefill attention on EITHER KV layout
+(``repro.kernels.chunk_attention``, flash-style online softmax over the
+resident prefix + the chunk's fresh K/V — greedy tokens stay
+bit-identical).  ``--shared-prefix N`` gives every prompt one
 common N-token system prefix to exercise the prefix cache;
 ``--long-frac/--long-prompt`` mix in a heavy prompt tail to exercise
 chunking.
@@ -40,7 +44,8 @@ slot) and/or conv/ssm recurrent state (O(1) per slot).  These state
 kinds cannot be paged or prefix-cached, so the engine degrades the paged
 knobs gracefully (prefix reuse auto-off, block reservation skipped) and
 reports the effective ``cache_kind`` in its stats; ``--decode-kernel
-pallas`` is attention-paged-only and errors for them.
+pallas`` is attention-paged-only and ``--prefill-kernel pallas`` needs
+position-addressable KV lanes — both error for these families.
 
 ``--stream`` switches from batch replay to the streaming API: tokens are
 printed as SSE-style ``data:`` lines the moment they land
@@ -159,6 +164,11 @@ def main(argv=None) -> int:
                    default="reference",
                    help="paged decode attention: dense-gather reference or "
                         "the fused Pallas paged-attention kernel")
+    p.add_argument("--prefill-kernel", choices=("reference", "pallas"),
+                   default="reference",
+                   help="chunked-prefill attention (paged or dense KV): "
+                        "dense-gather reference or the flash Pallas "
+                        "prefill-chunk kernel")
     p.add_argument("--chunk-size", type=int, default=32,
                    help="max prompt tokens consumed per prefill chunk")
     p.add_argument("--buckets", default="",
@@ -241,6 +251,10 @@ def main(argv=None) -> int:
         if args.decode_kernel == "pallas":
             p.error(f"--decode-kernel pallas needs paged attention KV; "
                     f"{args.arch} serves via per-slot {kind!r} state")
+        if args.prefill_kernel == "pallas":
+            p.error(f"--prefill-kernel pallas needs position-addressable "
+                    f"attention KV; {args.arch} serves via per-slot "
+                    f"{kind!r} state")
         if args.spec_k:
             p.error(f"--spec-k needs a multi-token-capable KV cache; "
                     f"{args.arch} serves via per-slot {kind!r} state")
@@ -256,6 +270,10 @@ def main(argv=None) -> int:
     dims = dict(batch=args.batch, max_len=args.max_len,
                 max_prompt_len=args.max_prompt_len,
                 kv_layout=args.kv_layout, chunk_size=args.chunk_size)
+    if args.prefill_kernel != "reference":
+        # both KV layouts take the flash prefill-chunk kernel; per-slot
+        # ring/ssm families were rejected above
+        dims["prefill_kernel"] = args.prefill_kernel
     if args.buckets:
         dims["buckets"] = tuple(int(b) for b in args.buckets.split(","))
     if args.prefill_budget:

@@ -269,7 +269,8 @@ class TransformerLM(Module):
     def prefill_chunk(self, tokens: jax.Array, cache, *, slot: jax.Array,
                       offset: jax.Array, n_valid: jax.Array,
                       dst: Optional[jax.Array] = None,
-                      need_logits: bool = True):
+                      need_logits: bool = True,
+                      prefill_kernel: str = "reference"):
         """Consume one bucket-padded prompt chunk for slot ``slot``.
 
         ``tokens``: (1, W) int32 — ``n_valid`` real tokens starting at
@@ -279,6 +280,9 @@ class TransformerLM(Module):
         ``dst`` carries the flat pool row per chunk position, sentinel for
         padding/cached-prefix positions — see
         :meth:`repro.nn.attention.Attention.prefill_chunk`).
+        ``prefill_kernel`` picks the chunk attention implementation per
+        layer (``"reference"`` dense gather vs ``"pallas"`` flash
+        prefill-chunk kernel — see the same method).
 
         Returns ``(logits (1, vocab) at the chunk's LAST valid position,
         updated cache)`` — the engine only samples from the logits of a
@@ -288,7 +292,8 @@ class TransformerLM(Module):
         entirely; those calls return ``(None, cache)``.
         """
         x = constrain_acts(self.embed(tokens))
-        kw = dict(slot=slot, offset=offset, n_valid=n_valid)
+        kw = dict(slot=slot, offset=offset, n_valid=n_valid,
+                  prefill_kernel=prefill_kernel)
 
         if isinstance(cache, PagedKVCache):
             table = cache.table

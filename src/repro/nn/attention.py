@@ -274,7 +274,8 @@ class Attention(Module):
 
     def prefill_chunk(self, x: jax.Array, cache, *, slot: jax.Array,
                       offset: jax.Array, n_valid: jax.Array,
-                      dst: Optional[jax.Array] = None):
+                      dst: Optional[jax.Array] = None,
+                      prefill_kernel: str = "reference"):
         """Consume one prompt chunk for ONE slot of a batched serving cache.
 
         ``x``: (1, W, dim) — a bucket-padded span of the slot's prompt whose
@@ -313,9 +314,21 @@ class Attention(Module):
         even with identical bytes) — and attention gathers the slot's
         logical lane through its block table.
 
+        ``prefill_kernel`` selects the chunk attention implementation for
+        the paged and dense layouts: ``"reference"`` is the dense gather +
+        masked softmax above; ``"pallas"`` is the flash-style
+        :func:`repro.kernels.chunk_attention` kernel — prefix blocks
+        stream through VMEM inside an online-softmax loop and the
+        gathered lane view is never materialized.  Valid rows match the
+        reference to float tolerance (padding rows carry no contract —
+        the engine never reads them); ring-buffer lanes refuse the
+        kernel (their wraparound gather has no paged-pool analogue).
+
         Returns ``(chunk outputs (1, W, dim), updated cache)`` with the
         slot's length advanced to ``offset + n_valid``.
         """
+        if prefill_kernel not in ("reference", "pallas"):
+            raise ValueError(f"unknown prefill_kernel {prefill_kernel!r}")
         w = x.shape[1]
         qpos = offset + jnp.arange(w)  # (W,) absolute positions
         q, k, v = self._qkv(x, positions=qpos[None, :],
@@ -333,17 +346,32 @@ class Attention(Module):
                                         mode="drop")
             pool_v = pool_v.at[dst].set(v[0].astype(pool_v.dtype),
                                         mode="drop")
-            kpos = jnp.arange(max_table * bs)
-            rows = cache.table[slot, kpos // bs] * bs + kpos % bs
-            gk = pool_k[rows][None].astype(x.dtype)  # (1, S, kvh, hd)
-            gv = pool_v[rows][None].astype(x.dtype)
-            valid = kpos[None, :] <= qpos[:, None]  # (W, S)
-            out = self._attend(q, gk, gv, valid[None, None])
+            if prefill_kernel == "pallas":
+                from repro.kernels.chunk_attention import chunk_attention
+
+                out = chunk_attention(
+                    q[0], pool_k.reshape(cache.k.shape),
+                    pool_v.reshape(cache.v.shape), cache.table[slot],
+                    k[0].astype(pool_k.dtype), v[0].astype(pool_v.dtype),
+                    offset, n_valid).reshape(1, w, -1)
+            else:
+                kpos = jnp.arange(max_table * bs)
+                rows = cache.table[slot, kpos // bs] * bs + kpos % bs
+                gk = pool_k[rows][None].astype(x.dtype)  # (1, S, kvh, hd)
+                gv = pool_v[rows][None].astype(x.dtype)
+                valid = kpos[None, :] <= qpos[:, None]  # (W, S)
+                out = self._attend(q, gk, gv, valid[None, None])
             length = cache.length.at[slot].set(offset + n_valid)
             new_cache = PagedKVCache(pool_k.reshape(cache.k.shape),
                                      pool_v.reshape(cache.v.shape),
                                      cache.table, length)
         elif self._is_ring(cache):
+            if prefill_kernel == "pallas":
+                raise NotImplementedError(
+                    "prefill_kernel='pallas' streams a position-addressable "
+                    "KV prefix (paged pool or dense lane); ring-buffer "
+                    "(sliding-window) lanes wrap around and use the "
+                    "reference path")
             ring = self.window
             i = jnp.arange(ring)
             # lane i holds the newest absolute position < offset congruent
@@ -383,11 +411,20 @@ class Attention(Module):
                                                mode="drop")
             new_v = cache.v.at[slot, wpos].set(v[0].astype(cache.v.dtype),
                                                mode="drop")
-            kpos = jnp.arange(max_len)
-            valid = kpos[None, :] <= qpos[:, None]  # (W, max_len)
-            out = self._attend(q, new_k[slot][None].astype(x.dtype),
-                               new_v[slot][None].astype(x.dtype),
-                               valid[None, None])
+            if prefill_kernel == "pallas":
+                from repro.kernels.chunk_attention import (
+                    chunk_attention_dense)
+
+                out = chunk_attention_dense(
+                    q[0], new_k[slot], new_v[slot],
+                    k[0].astype(cache.k.dtype), v[0].astype(cache.v.dtype),
+                    offset, n_valid).reshape(1, w, -1)
+            else:
+                kpos = jnp.arange(max_len)
+                valid = kpos[None, :] <= qpos[:, None]  # (W, max_len)
+                out = self._attend(q, new_k[slot][None].astype(x.dtype),
+                                   new_v[slot][None].astype(x.dtype),
+                                   valid[None, None])
             length = cache.length.at[slot].set(offset + n_valid)
             new_cache = KVCache(new_k, new_v, length)
         return self.o_proj(out), new_cache

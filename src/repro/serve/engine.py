@@ -178,6 +178,9 @@ class ContinuousEngine:
     baseline.  ``decode_kernel`` (paged only) picks the decode attention:
     ``"reference"`` dense-gather or ``"pallas"`` fused
     :func:`repro.kernels.paged_attention` (interpret mode off-TPU).
+    ``prefill_kernel`` (either layout, cache kind ``"kv"`` only) does the
+    same for the chunked-prefill attention: ``"reference"`` dense-gather
+    or ``"pallas"`` flash :func:`repro.kernels.chunk_attention`.
     Greedy tokens are bit-identical across all of it.
 
     **Heterogeneous per-slot state.**  The model declares its state
@@ -241,6 +244,7 @@ class ContinuousEngine:
                  kv_layout: str = "paged", block_size: int = 16,
                  n_blocks: Optional[int] = None,
                  decode_kernel: str = "reference",
+                 prefill_kernel: str = "reference",
                  chunk_size: int = 32,
                  buckets: Optional[Sequence[int]] = None,
                  prefill_chunk_budget: Optional[int] = None,
@@ -288,6 +292,19 @@ class ContinuousEngine:
             raise ValueError(
                 "decode_kernel='pallas' is the fused paged-attention "
                 "kernel; it requires kv_layout='paged' (cache kind 'kv')")
+        if prefill_kernel not in ("reference", "pallas"):
+            raise ValueError(f"unknown prefill_kernel {prefill_kernel!r}")
+        if prefill_kernel == "pallas" and self.cache_kind != "kv":
+            # mirror the decode-kernel guard: the flash prefill-chunk
+            # kernel streams a position-addressable KV prefix (paged pool
+            # or dense lane); ring/ssm/hybrid per-slot state has neither
+            raise UnsupportedCacheError(
+                "prefill_kernel='pallas' is the flash prefill-chunk "
+                "attention kernel; it requires position-addressable KV "
+                "lanes (cache kind 'kv' — ring/ssm/hybrid state prefills "
+                "through the reference path)",
+                roadmap_item="make the kernels actually fast, and prove "
+                "it compiled")
         if self.cache_kind != "kv":
             # ring / ssm / hybrid state cannot be paged or prefix-cached:
             # degrade gracefully to the per-slot layout (block reservation
@@ -313,6 +330,7 @@ class ContinuousEngine:
         if self.prefill_chunk_budget < 1:
             raise ValueError("need prefill_chunk_budget >= 1")
         self.decode_kernel = decode_kernel
+        self.prefill_kernel = prefill_kernel
         self.model, self.cfg = model, cfg
         self.batch, self.max_len = batch, max_len
         self.max_prompt_len, self.max_stop_ids = max_prompt_len, max_stop_ids
@@ -405,13 +423,21 @@ class ContinuousEngine:
         self._spec_drafted = 0
         self._spec_accepted = 0
 
+        # the prefill-kernel kwarg rides along only when non-default: the
+        # kv-kind guard above means every model that can see it accepts it,
+        # and ring/ssm/hybrid families keep their original prefill_chunk
+        # signature untouched
+        pk_kw = ({} if prefill_kernel == "reference"
+                 else {"prefill_kernel": prefill_kernel})
+
         if draft_model is None:
             def chunk_fn(need_logits, toks, cache, slot, offset, n_valid,
                          dst=None):
                 kw = {} if dst is None else {"dst": dst}
                 return model.prefill_chunk(toks, cache, slot=slot,
                                            offset=offset, n_valid=n_valid,
-                                           need_logits=need_logits, **kw)
+                                           need_logits=need_logits,
+                                           **pk_kw, **kw)
         else:
             # the draft prefills the same chunk into its own cache (logits
             # never needed — the verifier's final chunk seeds the first
@@ -421,10 +447,10 @@ class ContinuousEngine:
                 kw = {} if dst is None else {"dst": dst}
                 logits, cache = model.prefill_chunk(
                     toks, cache, slot=slot, offset=offset, n_valid=n_valid,
-                    need_logits=need_logits, **kw)
+                    need_logits=need_logits, **pk_kw, **kw)
                 _, dcache = draft_model.prefill_chunk(
                     toks, dcache, slot=slot, offset=offset, n_valid=n_valid,
-                    need_logits=False, **kw)
+                    need_logits=False, **pk_kw, **kw)
                 return logits, cache, dcache
 
         def bind_fn(state, slot, logits, length, temp, max_new, stop_row,
@@ -1035,7 +1061,8 @@ class ContinuousEngine:
             "blocks_in_use": a.n_in_use,
             "blocks_retained": len(self.manager.retained),
             "prefix_hit_tokens": self.manager.prefix_hit_tokens,
-            "decode_kernel": self.decode_kernel})
+            "decode_kernel": self.decode_kernel,
+            "prefill_kernel": self.prefill_kernel})
         return stats
 
     def prefill_stats(self) -> dict:
@@ -1054,6 +1081,7 @@ class ContinuousEngine:
                                 if admitted else 0.0),
             "prefill_chunks": self._prefill_chunks,
             "max_step_prefill_tokens": self._max_step_prefill_tokens,
+            "prefill_kernel": self.prefill_kernel,
         }
 
     def spec_stats(self) -> dict:

@@ -1,0 +1,192 @@
+"""The perf-trajectory gate: ``benchmarks/check_regression.py`` must
+actually fail on a synthetic regression (the bench-trajectory CI job's
+contract), and provenance-mismatched timings must refuse to compare.
+
+No kernels run here — cells are hand-built to the microbench schema, so
+this is cheap enough for tier 1.
+"""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from benchmarks.check_regression import (check, load_history,  # noqa: E402
+                                         load_thresholds, provenance_sig)
+
+CPU_INTERP = {"backend": "cpu", "device_kind": "cpu",
+              "compiled_backend": None, "interpret_mode": True,
+              "jax_version": "0.0"}
+TPU_COMPILED = {"backend": "tpu", "device_kind": "TPU v5e",
+                "compiled_backend": "tpu", "interpret_mode": False,
+                "jax_version": "0.0"}
+
+RULES = [
+    {"pattern": "parity_max_abs_err/*", "kind": "correctness",
+     "max_value": 5e-4},
+    {"pattern": "cells_emitted/total", "kind": "count", "min_value": 20},
+    {"pattern": "decode_step_ms/*", "kind": "timing",
+     "max_regression_pct": 50},
+]
+
+
+def _cell(metric, variant, stats, prov, axes=None):
+    return {"schema": 1, "suite": "microbench_kernels", "metric": metric,
+            "variant": variant, "axes": axes or {"batch": 2, "seq": 32},
+            "stats": stats, "provenance": dict(prov), "smoke": True,
+            "unix_time": 0.0}
+
+
+def _timing(ms, prov):
+    return _cell("decode_step_ms", "pallas",
+                 {"mean_ms": ms, "p50_ms": ms, "min_ms": ms,
+                  "compile_ms": 100.0, "iters": 10, "warmup": 2}, prov)
+
+
+# ---- timing regressions ------------------------------------------------------
+
+
+def test_compiled_timing_regression_hard_fails():
+    history = [_timing(1.0, TPU_COMPILED), _timing(1.9, TPU_COMPILED)]
+    failures, warnings = check(history, RULES)
+    assert len(failures) == 1 and "TIMING" in failures[0]
+    assert not warnings
+
+
+def test_interpret_timing_regression_only_warns():
+    """CPU/interpret timings on shared runners are too noisy to block a
+    merge: same synthetic regression, warn not fail."""
+    history = [_timing(1.0, CPU_INTERP), _timing(1.9, CPU_INTERP)]
+    failures, warnings = check(history, RULES)
+    assert not failures
+    assert len(warnings) == 1 and "warn-only" in warnings[0]
+
+
+def test_timing_within_threshold_passes():
+    history = [_timing(1.0, TPU_COMPILED), _timing(1.4, TPU_COMPILED)]
+    failures, warnings = check(history, RULES)
+    assert not failures and not warnings
+
+
+def test_cross_provenance_cells_are_separate_series():
+    """An interpret-mode cell after a compiled baseline is NOT a
+    regression — different provenance means a different series, never a
+    comparison (the BENCH_serve mislabeling this PR fixes)."""
+    history = [_timing(0.3, TPU_COMPILED), _timing(1.9, CPU_INTERP)]
+    failures, warnings = check(history, RULES)
+    assert not failures and not warnings
+    assert provenance_sig(history[0]) != provenance_sig(history[1])
+
+
+def test_baseline_is_best_prior_not_last():
+    """A noisy slow cell must not ratchet the baseline: newest compares
+    against the BEST prior mean."""
+    history = [_timing(1.0, TPU_COMPILED), _timing(2.5, TPU_COMPILED),
+               _timing(1.2, TPU_COMPILED)]
+    failures, _ = check(history, RULES)
+    assert not failures  # 1.2 vs best 1.0 = +20% < 50%
+
+
+# ---- correctness + count hard-fail everywhere --------------------------------
+
+
+def test_parity_violation_hard_fails_even_interpreted():
+    history = [_cell("parity_max_abs_err", "chunk_attention",
+                     {"value": 0.2}, CPU_INTERP)]
+    failures, _ = check(history, RULES)
+    assert len(failures) == 1 and "CORRECTNESS" in failures[0]
+
+
+def test_missing_benchmarked_path_hard_fails():
+    history = [_cell("cells_emitted", "total", {"value": 12}, CPU_INTERP,
+                     axes={})]
+    failures, _ = check(history, RULES)
+    assert len(failures) == 1 and "COUNT" in failures[0]
+
+
+# ---- the real repo artifacts -------------------------------------------------
+
+
+def test_repo_history_passes_repo_thresholds():
+    """The committed trajectory must be green against the committed
+    thresholds (otherwise the bench-trajectory job is red on main)."""
+    history = load_history(str(REPO / "BENCH_history.jsonl"))
+    rules = load_thresholds(str(REPO / "benchmarks" / "thresholds.json"))
+    assert history, "BENCH_history.jsonl is empty"
+    metrics = {f"{c['metric']}/{c['variant']}" for c in history}
+    for path in ("decode_step_ms/pallas", "decode_step_ms/reference",
+                 "prefill_chunk_ms/pallas", "prefill_chunk_ms/reference",
+                 "kernel_us/paged_attention_pallas",
+                 "kernel_us/chunk_attention_pallas",
+                 "parity_max_abs_err/chunk_attention",
+                 "cells_emitted/total"):
+        assert path in metrics, f"no cell for benchmarked path {path}"
+    for cell in history:  # every cell provenance-stamped
+        prov = cell["provenance"]
+        assert "interpret_mode" in prov and "compiled_backend" in prov
+    failures, _ = check(history, rules)
+    assert not failures, failures
+
+
+def test_cli_exits_nonzero_on_synthetic_regression(tmp_path):
+    """End-to-end: the CI invocation (python -m benchmarks.check_regression)
+    demonstrably fails on a compiled-provenance regression."""
+    hist = tmp_path / "hist.jsonl"
+    with open(hist, "w") as fh:
+        for cell in (_timing(1.0, TPU_COMPILED), _timing(3.0, TPU_COMPILED)):
+            fh.write(json.dumps(cell) + "\n")
+    rules = tmp_path / "thresholds.json"
+    rules.write_text(json.dumps(RULES))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_regression",
+         "--history", str(hist), "--thresholds", str(rules)],
+        capture_output=True, text=True, cwd=REPO,
+        env={**os.environ, "PYTHONPATH": f"{REPO}/src:{REPO}"})
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "TIMING" in proc.stdout
+    # and the same history under interpret provenance exits 0 (warn-only)
+    with open(hist, "w") as fh:
+        for cell in (_timing(1.0, CPU_INTERP), _timing(3.0, CPU_INTERP)):
+            fh.write(json.dumps(cell) + "\n")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_regression",
+         "--history", str(hist), "--thresholds", str(rules)],
+        capture_output=True, text=True, cwd=REPO,
+        env={**os.environ, "PYTHONPATH": f"{REPO}/src:{REPO}"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "WARN" in proc.stdout
+
+
+# ---- provenance refusal in the shared helpers --------------------------------
+
+
+def test_speedup_refuses_cross_provenance():
+    from benchmarks.common import speedup, timing_cell
+
+    a = {"ms": 1.0, **CPU_INTERP}
+    b = {"ms": 0.5, **TPU_COMPILED}
+    with pytest.raises(ValueError, match="provenance"):
+        speedup(a, b)
+    c = {"ms": 0.5, **CPU_INTERP}
+    assert speedup(a, c) == pytest.approx(2.0)
+    # timing_cell stamps the live provenance
+    cell = timing_cell(1.25)
+    assert cell["ms"] == 1.25
+    assert "compiled_backend" in cell and "interpret_mode" in cell
+
+
+def test_bench_serve_cells_are_provenance_stamped():
+    """The committed BENCH_serve.json must never regress to bare floats."""
+    with open(REPO / "BENCH_serve.json") as fh:
+        summary = json.load(fh)
+    for name, cell in summary["decode_step_ms"].items():
+        assert isinstance(cell, dict), f"{name} is a bare float again"
+        assert "ms" in cell and "compiled_backend" in cell, name
+        if cell["interpret_mode"]:
+            assert cell["compiled_backend"] is None, name

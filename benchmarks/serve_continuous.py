@@ -73,12 +73,23 @@ so chunking is exercised in CI) and ``--json`` writes the summary for
 the workflow artifact / the committed ``BENCH_serve.json``.  The summary
 carries TTFT p50/p95, prefix-hit-rate, and per-step stall fields for
 every variant row.
+
+``--sharded`` runs the dp x tp sharded serving sweep instead: the same
+seeded trace replayed through engines on ``{data, model}`` meshes at
+every grid point of ``repro.launch.microbench.SHARDED_GRID``, tokens
+asserted bit-identical to the 1x1 replay, with ``sharded_tok_s`` /
+``sharded_decode_step_ms`` / ``sharded_tokens_mismatch`` cells appended
+to ``--history`` for the regression gate.  It re-execs itself under
+``--xla_force_host_platform_device_count=8`` when fewer than 4 devices
+are visible, so the sweep runs on any CPU host.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
 import time
 
@@ -100,16 +111,19 @@ except ImportError:  # bare script: benchmarks/ itself is sys.path[0]
 
 
 def decode_step_ms(model, cfg, *, batch, max_len, max_prompt_len,
-                   block_size, decode_kernel, iters=20, warmup=3) -> float:
+                   block_size, decode_kernel, iters=20, warmup=3,
+                   mesh=None) -> float:
     """Mean wall time of ONE jitted batched decode step with every slot
     live — isolates the attention-gather cost from scheduler/prefill
     overhead.  Submits ``batch`` max-budget requests, admits them all,
-    then drives the jitted decode directly."""
+    then drives the jitted decode directly.  With ``mesh`` the engine
+    runs sharded (params/pool/state placed, activations constrained), so
+    the timing includes any collective cost the partitioner inserts."""
     eng = ContinuousEngine(model, cfg, batch=batch, max_len=max_len,
                            max_prompt_len=max_prompt_len, kv_layout="paged",
                            block_size=block_size,
                            decode_kernel=decode_kernel,
-                           prefill_chunk_budget=10**9)
+                           prefill_chunk_budget=10**9, mesh=mesh)
     rng = np.random.default_rng(0)
     for _ in range(batch):
         eng.submit(rng.integers(0, cfg.vocab, max_prompt_len - 1)
@@ -564,6 +578,74 @@ def run(*, smoke: bool = False, fact_rank: float = 0.5, solver: str = "svd",
     return rows, summary
 
 
+SHARDED_DIMS = dict(batch=4, max_len=48, max_prompt_len=16)
+
+
+def run_sharded(*, smoke: bool = True, seed: int = 0) -> tuple:
+    """The dp x tp sharded serving sweep (``--sharded``).
+
+    Replays ONE seeded trace (chunked prefill + shared prefix) through a
+    ContinuousEngine at every mesh point of
+    :data:`repro.launch.microbench.SHARDED_GRID`, asserts every grid
+    point's tokens bit-identical to the 1x1 replay, and times the jitted
+    sharded decode step.  Returns ``(cells, summary)`` — provenance-
+    stamped cells for ``BENCH_history.jsonl`` plus a JSON summary.
+    """
+    from repro.dist import make_serve_mesh
+    from repro.launch.microbench import SHARDED_GRID, make_cell, provenance
+
+    n_dev = len(jax.devices())
+    assert n_dev >= 4, "run_sharded needs >= 4 devices (main() re-execs)"
+    cfg = get_config("paper-tiny").reduced()
+    model = build_model(jax.random.PRNGKey(0), cfg)
+    n_req = 8 if smoke else 24
+    trace = make_trace(n_req, seed=seed, load=0.5, min_prompt=4,
+                       max_prompt=12, min_new=2, max_new=8,
+                       vocab=cfg.vocab, shared_prefix=4)
+    block_size = 8
+    prov = provenance()
+    axes = dict(SHARDED_DIMS, block_size=block_size, requests=n_req)
+    cells, grid, ref, mismatch = [], {}, None, 0
+    for dp, tp in SHARDED_GRID:
+        mesh = make_serve_mesh(f"{dp},{tp}")  # None at 1x1: the baseline
+        variant = f"dp{dp}tp{tp}"
+        rows, stats = bench_trace(model, cfg, trace, kv_layout="paged",
+                                  block_size=block_size, mesh=mesh,
+                                  **SHARDED_DIMS)
+        toks = {r.uid: tuple(r.tokens) for r in rows}
+        if ref is None:
+            ref = toks
+        bad = sum(1 for uid in ref if toks.get(uid) != ref[uid])
+        mismatch += bad
+        assert bad == 0, f"{variant}: {bad} request(s) diverged from 1x1"
+        step = decode_step_ms(model, cfg, block_size=block_size,
+                              decode_kernel="reference", mesh=mesh,
+                              iters=(8 if smoke else 20), warmup=2,
+                              **SHARDED_DIMS)
+        cells.append(make_cell("sharded_tok_s", variant, axes,
+                               {"value": round(stats["tokens_per_s"], 3)},
+                               prov, smoke=smoke))
+        cells.append(make_cell("sharded_decode_step_ms", variant, axes,
+                               {"mean_ms": step}, prov, smoke=smoke))
+        grid[variant] = {"devices": dp * tp,
+                         "tokens_per_s": stats["tokens_per_s"],
+                         "decode_step_ms": step}
+    cells.append(make_cell(
+        "sharded_tokens_mismatch", "total", axes,
+        {"value": mismatch,
+         "grid": [f"dp{d}tp{t}" for d, t in SHARDED_GRID]},
+        prov, smoke=smoke))
+    paths = sorted({f"{c['metric']}/{c['variant']}" for c in cells})
+    cells.append(make_cell("cells_emitted", "sharded_serve", {},
+                           {"value": len(cells), "paths": paths}, prov,
+                           smoke=smoke))
+    summary = {"suite": "sharded_serve", "smoke": smoke, "seed": seed,
+               "n_devices": n_dev, "grid": grid,
+               "tokens_identical_to_1x1": True,  # asserted above
+               "cells": cells}
+    return cells, summary
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--smoke", action="store_true",
@@ -574,7 +656,40 @@ def main(argv=None) -> int:
     p.add_argument("--fact-rank", type=float, default=0.5)
     p.add_argument("--solver", default="svd")
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--sharded", action="store_true",
+                   help="run the dp x tp sharded serving sweep instead of "
+                        "the replay suite (re-execs itself under 8 forced "
+                        "CPU host devices when fewer than 4 are visible)")
+    p.add_argument("--history", default="",
+                   help="append the sharded cells to this JSONL perf "
+                        "trajectory (BENCH_history.jsonl)")
     args = p.parse_args(argv)
+    if args.sharded:
+        if len(jax.devices()) < 4:
+            env = dict(os.environ)
+            env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            env.setdefault("JAX_PLATFORMS", "cpu")
+            print("# <4 devices visible; re-exec with "
+                  "--xla_force_host_platform_device_count=8")
+            return subprocess.run(
+                [sys.executable, __file__] + list(argv or sys.argv[1:]),
+                env=env).returncode
+        cells, summary = run_sharded(smoke=args.smoke, seed=args.seed)
+        for v, row in summary["grid"].items():
+            print(f"  {v}: {row['tokens_per_s']:8.1f} tok/s   decode "
+                  f"{row['decode_step_ms']:7.3f} ms/step "
+                  f"({row['devices']} device(s))")
+        if args.history:
+            from repro.launch.microbench import append_history
+            n = append_history(args.history, cells)
+            print(f"# appended {n} cells to {args.history}")
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(summary, f, indent=2, default=float)
+                f.write("\n")
+            print(f"wrote summary to {args.json}")
+        print("serve_continuous sharded: OK")
+        return 0
     _, summary = run(smoke=args.smoke, fact_rank=args.fact_rank,
                      solver=args.solver, seed=args.seed)
     if args.json:

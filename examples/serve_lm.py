@@ -31,6 +31,13 @@ serving side) over the paged KV cache with chunked, prefix-aware prefill.
     PYTHONPATH=src python examples/serve_lm.py --reduced --batch 4 \
         --n-requests 8 --arch mamba2-2.7b
 
+    # sharded serving: the engine SPMD on a {data, model} mesh (params,
+    # paged pool, slot state, activations all placed; greedy tokens
+    # bit-identical to single-device) — 8 emulated CPU devices suffice
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu \
+      PYTHONPATH=src python examples/serve_lm.py --reduced --batch 4 \
+        --n-requests 8 --mesh 2,2
+
 Wraps the production serve driver (``repro.launch.serve``), so every
 engine knob threads straight through: ``--kv-layout`` / ``--block-size`` /
 ``--n-blocks`` pick the KV layout, ``--decode-kernel`` picks the paged
@@ -48,6 +55,9 @@ factorized draft + dense multi-token verify, bit-exact greedy).
 ``--http`` skips the offline trace entirely and serves the engine over
 HTTP (``--host`` / ``--port`` / ``--max-pending`` / ``--request-timeout``
 — see ``src/repro/serve/README.md`` §The HTTP front door).
+``--mesh dp,tp`` (or ``$REPRO_MESH``) runs the engine SPMD on a
+``{data, model}`` mesh — see ``src/repro/dist/README.md`` and
+``src/repro/serve/README.md`` §Sharded serving.
 
 **The admission pipeline** (see ``src/repro/serve/README.md``): a prompt
 is prefilled in ``chunk_size``-token chunks, each right-padded to one of

@@ -1,7 +1,10 @@
+from repro.dist.runtime import (RuntimeConfig, global_config, make_serve_mesh,
+                                parse_mesh_spec)
 from repro.dist.sharding import (activation_mesh, batch_spec, cache_shardings,
-                                 constrain_acts, data_sharding,
+                                 cache_specs, constrain_acts, data_sharding,
                                  model_shardings, spec_for_param)
 
-__all__ = ["activation_mesh", "batch_spec", "cache_shardings",
+__all__ = ["activation_mesh", "batch_spec", "cache_shardings", "cache_specs",
            "constrain_acts", "data_sharding", "model_shardings",
-           "spec_for_param"]
+           "spec_for_param", "RuntimeConfig", "global_config",
+           "make_serve_mesh", "parse_mesh_spec"]

@@ -1,0 +1,142 @@
+"""Global runtime configuration for sharded serving.
+
+Alpa keeps one process-wide ``global_config`` object (``global_env.py``)
+so every knob that shapes the distributed runtime lives in a single,
+inspectable place instead of threading through a dozen call sites.  We
+adopt the same pattern here: :data:`global_config` is the one source of
+truth for the serving mesh spec and its companions, seeded from the
+environment at import time and overridable programmatically (tests) or
+via CLI flags (``repro.launch.serve --mesh dp,tp``).
+
+The serving mesh is a 2-D ``{data, model}`` mesh:
+
+- ``data``  — the decode-slot batch axis.  Slots are sharded across it;
+  each data shard decodes its slice of the batch.
+- ``model`` — the tensor-parallel axis.  Attention/MLP weights and the
+  KV head dim of the cache are sharded across it (Megatron layout, see
+  ``repro.dist.sharding``).
+
+No accelerators required: with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` the CPU backend
+exposes 8 host devices and every sharded path here runs (slowly but
+bit-exactly) on a laptop or CI runner.  That flag must be set *before*
+jax first initialises its backends — export it in the environment or
+re-exec, do not set it after ``import jax`` has run any computation.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+__all__ = [
+    "RuntimeConfig",
+    "global_config",
+    "parse_mesh_spec",
+    "make_serve_mesh",
+    "HOST_DEVICES_RECIPE",
+]
+
+HOST_DEVICES_RECIPE = (
+    "export XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+    "(before the first jax import) to emulate 8 devices on a CPU host"
+)
+
+
+def _env_bool(name: str, default: bool) -> bool:
+    raw = os.environ.get(name)
+    if raw is None:
+        return default
+    return raw.strip().lower() in ("1", "true", "yes", "on")
+
+
+class RuntimeConfig:
+    """Process-wide knobs for the distributed serving runtime.
+
+    Seeded from the environment once at import; mutate the singleton
+    :data:`global_config` to override (CLI flags do exactly that).
+    """
+
+    def __init__(self) -> None:
+        # "dp,tp" — e.g. "2,2".  Empty string = single-device serving
+        # (no mesh is built, the engine takes the unsharded path).
+        self.mesh_spec: str = os.environ.get("REPRO_MESH", "")
+        # Shard long activations over "model" inside prefill (sequence
+        # parallelism).  Off by default: decode steps are seq-len 1.
+        self.seq_parallel: bool = _env_bool("REPRO_SEQ_PARALLEL", False)
+        # Weight-shard replicated params over the data axes (ZeRO-3
+        # style).  Serving default is off: params are read-only and
+        # gather latency lands on every decode step.
+        self.fsdp_params: bool = _env_bool("REPRO_FSDP", False)
+
+    def describe(self) -> dict:
+        """Loggable snapshot of every knob (alpa prints the same)."""
+        return {
+            "mesh_spec": self.mesh_spec,
+            "seq_parallel": self.seq_parallel,
+            "fsdp_params": self.fsdp_params,
+        }
+
+
+global_config = RuntimeConfig()
+
+
+def parse_mesh_spec(spec: Optional[str]) -> Optional[Tuple[int, int]]:
+    """``"dp,tp"`` -> ``(dp, tp)``; ``None``/``""`` -> ``None``.
+
+    Accepts a bare ``"dp"`` as shorthand for ``(dp, 1)``.  Raises
+    ``ValueError`` on anything non-positive or non-integer so a typo'd
+    ``--mesh`` fails loudly instead of silently serving single-device.
+    """
+    if spec is None:
+        return None
+    spec = spec.strip()
+    if not spec:
+        return None
+    parts = [p.strip() for p in spec.split(",")]
+    if len(parts) > 2:
+        raise ValueError(
+            f"mesh spec {spec!r}: expected 'dp,tp' (at most two axes)"
+        )
+    try:
+        dims = [int(p) for p in parts]
+    except ValueError:
+        raise ValueError(
+            f"mesh spec {spec!r}: axes must be integers, e.g. '2,2'"
+        ) from None
+    if len(dims) == 1:
+        dims.append(1)
+    dp, tp = dims
+    if dp < 1 or tp < 1:
+        raise ValueError(f"mesh spec {spec!r}: axes must be >= 1")
+    return dp, tp
+
+
+def make_serve_mesh(spec: Optional[str] = None, *, devices=None):
+    """Build the ``{data, model}`` serving :class:`jax.sharding.Mesh`.
+
+    ``spec`` defaults to :data:`global_config`'s ``mesh_spec``; an empty
+    spec returns ``None`` (single-device serving, no mesh).  The mesh
+    takes the *first* ``dp*tp`` devices, so a 2x2 mesh works on an
+    8-device host without claiming all of them (``jax.make_mesh`` by
+    contrast insists on using every device).
+    """
+    if spec is None:
+        spec = global_config.mesh_spec
+    dims = parse_mesh_spec(spec)
+    if dims is None:
+        return None
+    import numpy as np
+
+    import jax
+
+    dp, tp = dims
+    if devices is None:
+        devices = jax.devices()
+    need = dp * tp
+    if need > len(devices):
+        raise ValueError(
+            f"mesh {dp}x{tp} needs {need} devices but only "
+            f"{len(devices)} are visible; {HOST_DEVICES_RECIPE}"
+        )
+    arr = np.asarray(devices[:need]).reshape(dp, tp)
+    return jax.sharding.Mesh(arr, ("data", "model"))

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import math
 from contextlib import contextmanager
+from contextvars import ContextVar
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -122,44 +123,102 @@ def data_sharding(mesh, shape: Tuple[int, ...]) -> NamedSharding:
     return NamedSharding(mesh, P(*spec))
 
 
-def cache_shardings(cache, mesh):
-    """Decode/prefill cache shardings: batch over data, heads over model.
+def cache_specs(cache, mesh):
+    """PartitionSpec tree for a decode/prefill cache (see cache_shardings).
 
-    KV lanes are (layers, batch, slots, kv_heads, head_dim); SSM/conv states
-    are (layers, batch, ...).  Any non-divisible dim is replicated."""
+    Two layouts are distinguished by structure:
+
+    * **paged** (a NamedTuple with a ``table`` field): the block pool k/v
+      are (layers, n_blocks, block_size, kv_heads, head_dim) — the pool is
+      GLOBAL over data (every data shard holds the full pool; the host-side
+      allocator hands out block ids with no notion of placement) and its
+      kv-head dim shards over "model".  The block table (batch, max_table)
+      and write frontier (layers, batch) shard their batch dim over data.
+    * **dense / ring / ssm** (everything else): per-slot lanes are
+      (layers, batch, ...) so dim 1 shards over data, and any trailing
+      (..., kv_heads, head_dim) lane shards its head dim over "model".
+
+    Any non-divisible dim — e.g. GQA kv_heads=3 on a 2-way model axis —
+    falls back to replication for that dim.
+    """
     tp = mesh.shape.get("model", 1)
     data_axes = _data_axes(mesh)
     dp = math.prod(mesh.shape[a] for a in data_axes) if data_axes else 1
+    data = _data_entry(data_axes) if data_axes else None
 
-    def spec(leaf):
+    fields = getattr(cache, "_fields", None)
+    if fields is not None and "table" in fields:
+        def pool(leaf) -> P:
+            s: list = [None] * len(leaf.shape)
+            if len(leaf.shape) >= 2 and tp > 1 and leaf.shape[-2] % tp == 0:
+                s[-2] = "model"
+            return P(*s)
+
+        def batch_dim(leaf, dim: int) -> P:
+            s: list = [None] * len(leaf.shape)
+            if dp > 1 and leaf.shape[dim] % dp == 0:
+                s[dim] = data
+            return P(*s)
+
+        return type(cache)(
+            k=pool(cache.k),
+            v=pool(cache.v),
+            table=batch_dim(cache.table, 0),
+            length=batch_dim(cache.length, len(cache.length.shape) - 1),
+        )
+
+    def spec(leaf) -> P:
         shape = leaf.shape
         s: list = [None] * len(shape)
         if len(shape) >= 2 and dp > 1 and shape[1] % dp == 0:
-            s[1] = _data_entry(data_axes)
+            s[1] = data
         if len(shape) >= 4 and tp > 1 and shape[-2] % tp == 0:
             s[-2] = "model"
-        return NamedSharding(mesh, P(*s))
+        return P(*s)
 
     return jax.tree_util.tree_map(spec, cache)
+
+
+def cache_shardings(cache, mesh):
+    """Decode/prefill cache shardings: batch over data, heads over model.
+
+    NamedSharding tree over :func:`cache_specs` — see there for the
+    paged-vs-dense layout rules.  KV lanes are
+    (layers, batch, slots, kv_heads, head_dim); SSM/conv states are
+    (layers, batch, ...).  Any non-divisible dim is replicated."""
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), cache_specs(cache, mesh),
+        is_leaf=lambda x: isinstance(x, P))
 
 
 # ---------------------------------------------------------------------------
 # Activation constraints
 # ---------------------------------------------------------------------------
 
-_ACTIVE: Optional[tuple] = None  # (mesh, seq_parallel) inside activation_mesh
+# (mesh, seq_parallel) inside an activation_mesh scope.  A ContextVar, not
+# a module global: BackgroundServer traces engine steps off the main
+# thread, and a module global set on one thread would leak the mesh into
+# (or hide it from) traces running concurrently on another.  Each thread
+# starts with a fresh context, so scopes are strictly per-thread/per-task.
+_ACTIVE: ContextVar[Optional[tuple]] = ContextVar(
+    "repro_activation_mesh", default=None)
 
 
 @contextmanager
 def activation_mesh(mesh, seq_parallel: bool = False):
     """Enable activation sharding constraints for traces under this scope."""
-    global _ACTIVE
-    prev = _ACTIVE
-    _ACTIVE = (mesh, seq_parallel)
+    token = _ACTIVE.set((mesh, seq_parallel))
     try:
         yield mesh
     finally:
-        _ACTIVE = prev
+        _ACTIVE.reset(token)
+
+
+def active_activation_mesh() -> Optional[tuple]:
+    """The ``(mesh, seq_parallel)`` of the innermost :func:`activation_mesh`
+    scope on THIS thread/task — exactly what :func:`constrain_acts` will
+    read — or ``None`` outside any scope."""
+    return _ACTIVE.get()
 
 
 def constrain_acts(x: jax.Array) -> jax.Array:
@@ -168,9 +227,10 @@ def constrain_acts(x: jax.Array) -> jax.Array:
     Batch shards over the data axes; with sequence parallelism the seq dim
     additionally shards over "model".  Outside an :func:`activation_mesh`
     scope this is the identity (returns ``x`` itself)."""
-    if _ACTIVE is None:
+    active = _ACTIVE.get()
+    if active is None:
         return x
-    mesh, seq_parallel = _ACTIVE
+    mesh, seq_parallel = active
     data_axes = _data_axes(mesh)
     dp = math.prod(mesh.shape[a] for a in data_axes) if data_axes else 1
     tp = mesh.shape.get("model", 1)
@@ -183,5 +243,5 @@ def constrain_acts(x: jax.Array) -> jax.Array:
 
 
 __all__ = ["batch_spec", "spec_for_param", "model_shardings", "data_sharding",
-           "cache_shardings", "activation_mesh", "constrain_acts",
-           "FSDP_MIN_SIZE"]
+           "cache_specs", "cache_shardings", "activation_mesh",
+           "active_activation_mesh", "constrain_acts", "FSDP_MIN_SIZE"]

@@ -29,6 +29,13 @@ Four metric families, swept over (batch, seq, block_size, heads):
 * ``parity_max_abs_err`` — kernel-vs-oracle max abs error for both
   kernels (the correctness cells the regression gate hard-fails on).
 
+``--sharded`` swaps the kernel matrix for the dp x tp serve grid
+(:data:`SHARDED_GRID`): the reference decode / prefill-chunk steps with
+params, paged pool, and activations placed on a ``{data, model}`` mesh
+(variants ``sharded_dp{dp}tp{tp}``).  It re-execs itself under
+``--xla_force_host_platform_device_count=8`` when fewer than 4 devices
+are visible, so the grid runs anywhere.
+
 Timing methodology: the first call (trace + compile + first run) is
 recorded as ``compile_ms``, never mixed into steady state; ``warmup``
 discarded iterations follow; then ``iters`` timed iterations with
@@ -42,6 +49,9 @@ from __future__ import annotations
 import argparse
 import contextlib
 import json
+import os
+import subprocess
+import sys
 import time
 from typing import Callable, Iterable, Optional
 
@@ -373,9 +383,86 @@ def bench_prefill_chunk_cells(point: dict, *, iters: int, warmup: int,
     return cells
 
 
+def bench_sharded_step_cells(point: dict, *, iters: int, warmup: int,
+                             prov: dict, smoke: bool) -> list[dict]:
+    """``decode_step_ms`` / ``prefill_chunk_ms`` cells under a
+    ``{data, model}`` mesh: the SAME jitted reference step with params
+    placed via :func:`repro.dist.sharding.model_shardings`, the paged
+    pool/table via ``cache_shardings``, and activations constrained
+    through an ``activation_mesh`` scope at trace time — variants
+    ``sharded_dp{dp}tp{tp}`` over the serve grid.  Pallas variants are
+    deliberately absent: the kernels are single-shard and the engine
+    refuses them under tp>1."""
+    from repro.dist.runtime import make_serve_mesh
+    from repro.dist.sharding import (activation_mesh, cache_shardings,
+                                     model_shardings)
+
+    model0, cfg = _bench_model(point)
+    batch, seq, bs = point["batch"], point["seq"], point["block_size"]
+    w = min(seq // 2 or 1, bs)
+    offset = seq - w
+    max_len = seq + 8
+    n_table = -(-max_len // bs)
+    cache0 = model0.init_paged_cache(batch, max_len, cfg,
+                                     n_blocks=batch * n_table + 1,
+                                     block_size=bs, dtype=jnp.float32)
+    table = np.asarray(
+        np.random.default_rng(0).permutation(batch * n_table)
+    ).reshape(batch, n_table).astype(np.int32)
+    tok = jnp.zeros((batch, 1), jnp.int32)
+    toks = jnp.zeros((1, w), jnp.int32)
+    qpos = offset + np.arange(w)
+    dst = jnp.asarray(table[0][qpos // bs] * bs + qpos % bs)
+    cells = []
+    for dp, tp in SHARDED_GRID:
+        if dp * tp > len(jax.devices()):
+            continue  # run_sharded_sweep re-execs with 8 forced devices
+        mesh = make_serve_mesh(f"{dp},{tp}")
+        variant = f"sharded_dp{dp}tp{tp}"
+        if mesh is None:  # 1x1: the unsharded reference path
+            model, dcache = model0, cache0
+        else:
+            model = jax.device_put(model0, model_shardings(model0, mesh))
+            dcache = jax.device_put(cache0, cache_shardings(cache0, mesh))
+        dcache = dcache._replace(
+            table=jnp.asarray(table),
+            length=jnp.broadcast_to(jnp.int32(seq), cache0.length.shape))
+
+        def dec(t, c, model=model, mesh=mesh):
+            with activation_mesh(mesh) if mesh is not None \
+                    else contextlib.nullcontext():
+                return model.decode(t, c)[0]
+
+        stats = time_fn(jax.jit(dec), tok, dcache, iters=iters,
+                        warmup=warmup)
+        cells.append(make_cell("decode_step_ms", variant, dict(point),
+                               stats, prov, smoke=smoke))
+
+        pcache = dcache._replace(
+            length=jnp.broadcast_to(jnp.int32(offset), cache0.length.shape))
+
+        def pre(t, c, model=model, mesh=mesh):
+            with activation_mesh(mesh) if mesh is not None \
+                    else contextlib.nullcontext():
+                return model.prefill_chunk(
+                    t, c, slot=jnp.int32(0), offset=jnp.int32(offset),
+                    n_valid=jnp.int32(w), dst=dst, need_logits=True)[0]
+
+        stats = time_fn(jax.jit(pre), toks, pcache, iters=iters,
+                        warmup=warmup)
+        stats["chunk_width"] = w
+        cells.append(make_cell("prefill_chunk_ms", variant, dict(point),
+                               stats, prov, smoke=smoke))
+    return cells
+
+
 # ---------------------------------------------------------------------------
 # the sweep
 # ---------------------------------------------------------------------------
+
+# the dp x tp serve grid every sharded bench walks (CPU-emulable with
+# XLA_FLAGS=--xla_force_host_platform_device_count=8)
+SHARDED_GRID = [(1, 1), (2, 1), (1, 2), (2, 2)]
 
 SMOKE_SWEEP = [
     {"batch": 2, "seq": 32, "block_size": 8, "heads": 4},
@@ -418,6 +505,25 @@ def run_sweep(*, smoke: bool = True, iters: int = 10, warmup: int = 2,
     return cells
 
 
+def run_sharded_sweep(*, smoke: bool = True, iters: int = 10,
+                      warmup: int = 2) -> list[dict]:
+    """The sharded microbench matrix (``--sharded``): reference decode +
+    prefill-chunk steps at every dp x tp point of :data:`SHARDED_GRID`,
+    plus its own ``cells_emitted/sharded`` count cell so the regression
+    gate hard-fails if a mesh point silently drops out of the sweep."""
+    prov = provenance()
+    points = SMOKE_SWEEP[:1] if smoke else SMOKE_SWEEP
+    cells: list[dict] = []
+    for point in points:
+        cells.extend(bench_sharded_step_cells(
+            point, iters=iters, warmup=warmup, prov=prov, smoke=smoke))
+    paths = sorted({f"{c['metric']}/{c['variant']}" for c in cells})
+    cells.append(make_cell("cells_emitted", "sharded", {},
+                           {"value": len(cells), "paths": paths}, prov,
+                           smoke=smoke))
+    return cells
+
+
 def format_cell(cell: dict) -> str:
     s = cell["stats"]
     if "mean_ms" in s:
@@ -445,10 +551,29 @@ def main(argv=None) -> int:
     p.add_argument("--profile-dir", default="",
                    help="activate jax.profiler around every timed region, "
                         "one trace per cell under this directory")
+    p.add_argument("--sharded", action="store_true",
+                   help="run the dp x tp sharded step sweep instead of the "
+                        "kernel matrix (re-execs itself under 8 forced CPU "
+                        "host devices when fewer than 4 are visible)")
     args = p.parse_args(argv)
     iters = args.iters or (10 if args.smoke else 30)
-    cells = run_sweep(smoke=args.smoke, iters=iters, warmup=args.warmup,
-                      profile_dir=args.profile_dir or None)
+    if args.sharded and len(jax.devices()) < 4:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        print("# <4 devices visible; re-exec with "
+              "--xla_force_host_platform_device_count=8")
+        code = ("from repro.launch.microbench import main; import sys; "
+                "sys.exit(main(sys.argv[1:]))")
+        return subprocess.run(
+            [sys.executable, "-c", code] + list(argv or sys.argv[1:]),
+            env=env).returncode
+    if args.sharded:
+        cells = run_sharded_sweep(smoke=args.smoke, iters=iters,
+                                  warmup=args.warmup)
+    else:
+        cells = run_sweep(smoke=args.smoke, iters=iters, warmup=args.warmup,
+                          profile_dir=args.profile_dir or None)
     for cell in cells:
         print(format_cell(cell))
     if args.json:

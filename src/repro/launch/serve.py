@@ -226,6 +226,13 @@ def main(argv=None) -> int:
                         "factorized draft proposes k tokens per round, the "
                         "dense model verifies them in one multi-token step "
                         "(greedy output stays bit-identical; 0 = off)")
+    p.add_argument("--mesh", default="",
+                   help="serving device mesh 'dp,tp' ({data, model} axes; "
+                        "e.g. '2,2' = 2-way data x 2-way tensor "
+                        "parallelism over the first 4 devices).  Empty = "
+                        "single-device.  Defaults to $REPRO_MESH.  "
+                        "CPU-testable: export XLA_FLAGS="
+                        "--xla_force_host_platform_device_count=8")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--reduced", action="store_true")
     args = p.parse_args(argv)
@@ -286,6 +293,23 @@ def main(argv=None) -> int:
             dims["n_blocks"] = args.n_blocks
         if args.prefix_retain >= 0:
             dims["prefix_retain_blocks"] = args.prefix_retain
+
+    from repro.dist.runtime import global_config, make_serve_mesh
+    if args.mesh:
+        global_config.mesh_spec = args.mesh
+    try:
+        mesh = make_serve_mesh()
+    except ValueError as e:
+        p.error(str(e))
+    if mesh is not None:
+        if (mesh.shape["model"] > 1
+                and "pallas" in (args.decode_kernel, args.prefill_kernel)):
+            p.error("pallas kernels are single-shard; use the reference "
+                    "kernels with a model (tp) axis > 1")
+        dims["mesh"] = mesh
+        print(f"# mesh: data={mesh.shape['data']} x "
+              f"model={mesh.shape['model']} on "
+              f"{mesh.devices.size} {mesh.devices.flat[0].platform} devices")
 
     if args.http:
         if args.stream:

@@ -335,7 +335,7 @@ class TransformerLM(Module):
         ``decode_kernel`` picks the paged attention implementation
         (``"reference"`` dense gather vs ``"pallas"`` fused kernel — see
         :meth:`repro.nn.attention.Attention.decode`)."""
-        x = self.embed(token)
+        x = constrain_acts(self.embed(token))
 
         if isinstance(cache, PagedKVCache):
             table = cache.table
@@ -344,7 +344,7 @@ class TransformerLM(Module):
                 blk, (k, v, ln) = xs
                 y, c2 = blk.decode(x, PagedKVCache(k, v, table, ln),
                                    decode_kernel=decode_kernel)
-                return y, (c2.k, c2.v, c2.length)
+                return constrain_acts(y), (c2.k, c2.v, c2.length)
 
             x, (k, v, ln) = jax.lax.scan(
                 body, x, (self.blocks, (cache.k, cache.v, cache.length)))
@@ -353,7 +353,8 @@ class TransformerLM(Module):
 
         def body(x, xs):
             blk, c = xs
-            return blk.decode(x, c)
+            y, c2 = blk.decode(x, c)
+            return constrain_acts(y), c2
 
         x, new_cache = jax.lax.scan(body, x, (self.blocks, cache))
         return self._head(self.final_norm(x)), new_cache

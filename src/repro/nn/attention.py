@@ -18,6 +18,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.dist.sharding import constrain_acts
 from repro.nn.linear import Linear
 from repro.nn.module import Module, static_field
 from repro.nn.rotary import apply_rope
@@ -270,7 +271,8 @@ class Attention(Module):
         else:
             new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k, 0, axis=1)
             new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v, 0, axis=1)
-        return self.o_proj(out), KVCache(new_k, new_v, jnp.asarray(s, jnp.int32))
+        return (constrain_acts(self.o_proj(out)),
+                KVCache(new_k, new_v, jnp.asarray(s, jnp.int32)))
 
     def prefill_chunk(self, x: jax.Array, cache, *, slot: jax.Array,
                       offset: jax.Array, n_valid: jax.Array,
@@ -427,7 +429,7 @@ class Attention(Module):
                                    valid[None, None])
             length = cache.length.at[slot].set(offset + n_valid)
             new_cache = KVCache(new_k, new_v, length)
-        return self.o_proj(out), new_cache
+        return constrain_acts(self.o_proj(out)), new_cache
 
     def decode(self, x: jax.Array, cache, *,
                decode_kernel: str = "reference") -> tuple[jax.Array, "KVCache"]:
@@ -489,7 +491,8 @@ class Attention(Module):
                 mask = valid[None, None, None, :]
             out = self._attend(q, new_k.astype(x.dtype),
                                new_v.astype(x.dtype), mask)
-            return self.o_proj(out), KVCache(new_k, new_v, pos + 1)
+            return (constrain_acts(self.o_proj(out)),
+                    KVCache(new_k, new_v, pos + 1))
         kpos = jnp.arange(cache.k.shape[1])
         if per_slot:
             qpos = pos[:, None] + jnp.arange(s)[None, :]  # (b, s)
@@ -520,7 +523,7 @@ class Attention(Module):
                 valid = valid & (kpos[None, :] > qpos[:, None] - self.window)
             mask = valid[None, None]  # (1, 1, s, S)
         out = self._attend(q, new_k.astype(x.dtype), new_v.astype(x.dtype), mask)
-        return self.o_proj(out), KVCache(new_k, new_v, pos + s)
+        return constrain_acts(self.o_proj(out)), KVCache(new_k, new_v, pos + s)
 
     def _decode_paged(self, x: jax.Array, cache: PagedKVCache,
                       kernel: str = "reference"
@@ -584,5 +587,5 @@ class Attention(Module):
             gv = pool_v[rows].astype(x.dtype)
             valid = kpos[None, None, :] <= qpos[:, :, None]  # (b, s, S)
             out = self._attend(q, gk, gv, valid[:, None])
-        return self.o_proj(out), PagedKVCache(new_k, new_v, cache.table,
-                                              pos + s)
+        return (constrain_acts(self.o_proj(out)),
+                PagedKVCache(new_k, new_v, cache.table, pos + s))

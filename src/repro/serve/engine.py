@@ -30,6 +30,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist.runtime import global_config
+from repro.dist.sharding import (activation_mesh, cache_shardings,
+                                 data_sharding, model_shardings)
 from repro.nn.attention import UnsupportedCacheError
 from repro.serve.paging import PagedCacheManager
 from repro.serve.sampling import greedy_tokens, sample_tokens
@@ -250,7 +253,8 @@ class ContinuousEngine:
                  prefill_chunk_budget: Optional[int] = None,
                  prefix_reuse: bool = True,
                  prefix_retain_blocks: Optional[int] = None,
-                 draft_model=None, spec_k: int = 0):
+                 draft_model=None, spec_k: int = 0,
+                 mesh=None):
         probe = getattr(model, "cache_kind", None)
         if probe is None:
             raise UnsupportedCacheError(
@@ -305,6 +309,19 @@ class ContinuousEngine:
                 "through the reference path)",
                 roadmap_item="make the kernels actually fast, and prove "
                 "it compiled")
+        if mesh is not None and mesh.shape.get("model", 1) > 1 \
+                and (decode_kernel == "pallas" or prefill_kernel == "pallas"):
+            # the fused kernels address the full kv-head dim per program;
+            # under tensor parallelism each model shard holds a head slice
+            # the kernels cannot see, so refuse instead of silently
+            # gathering the pool onto every shard
+            raise UnsupportedCacheError(
+                "decode_kernel/prefill_kernel='pallas' are single-shard "
+                "kernels; a mesh with model axis > 1 shards the KV heads "
+                "— use the reference kernels under tensor parallelism",
+                roadmap_item="make the kernels actually fast, and prove "
+                "it compiled (shard-local Pallas decode/prefill under "
+                "tensor parallelism)")
         if self.cache_kind != "kv":
             # ring / ssm / hybrid state cannot be paged or prefix-cached:
             # degrade gracefully to the per-slot layout (block reservation
@@ -397,6 +414,34 @@ class ContinuousEngine:
             max_new=jnp.ones((batch,), jnp.int32),
             stop_ids=jnp.full((batch, max_stop_ids), -1, jnp.int32),
         )
+        self.mesh = mesh
+        if mesh is not None:
+            # Mesh-native placement, done ONCE at construction: params via
+            # the Megatron specs, caches via the paged/dense cache rules
+            # (paged pool global over data, kv heads over "model", block
+            # tables and slot batch over "data"), slot state over "data".
+            # The host-side allocator (self.manager) stays global — block
+            # ids are placement-free; only the device tables shard.  The
+            # jits below trace under activation_mesh and pin every
+            # returned cache/state leaf back to its placement, so
+            # donation keeps layouts stable step over step.
+            fsdp = global_config.fsdp_params
+            model = self.model = jax.device_put(
+                model, model_shardings(model, mesh, fsdp=fsdp))
+            self._cache_sh = cache_shardings(self.cache, mesh)
+            self.cache = jax.device_put(self.cache, self._cache_sh)
+            if self.draft_cache is not None:
+                draft_model = self.draft_model = jax.device_put(
+                    draft_model, model_shardings(draft_model, mesh,
+                                                 fsdp=fsdp))
+                self._draft_sh = cache_shardings(self.draft_cache, mesh)
+                self.draft_cache = jax.device_put(self.draft_cache,
+                                                  self._draft_sh)
+            else:
+                self._draft_sh = None
+            self._state_sh = _SlotArrays(*(data_sharding(mesh, a.shape)
+                                           for a in self.state))
+            self.state = jax.device_put(self.state, self._state_sh)
         self.scheduler = Scheduler(batch)
         self._base_key = jax.random.PRNGKey(seed)
         self._tick = 0
@@ -587,6 +632,65 @@ class ContinuousEngine:
                                    active=state.active & ~done, n_gen=n_gen)
             return cache, state, g, m, n_acc, done
 
+        if mesh is not None:
+            # Wrap every jitted body: the trace runs inside activation_mesh
+            # (the ContextVar is read at TRACE time, so the scope rides
+            # into the compiled step no matter which thread later calls
+            # it), and the returned cache/state trees are pinned to their
+            # construction-time shardings — donated buffers then round-trip
+            # with identical layouts and the `.sharding` of self.cache
+            # stays the intended NamedSharding forever.
+            cache_sh, draft_sh = self._cache_sh, self._draft_sh
+            state_sh = self._state_sh
+
+            def _pin(tree, sh):
+                return jax.tree_util.tree_map(
+                    jax.lax.with_sharding_constraint, tree, sh)
+
+            inner_chunk = chunk_fn
+            if draft_model is None:
+                def chunk_fn(need_logits, toks, cache, *rest):
+                    with activation_mesh(mesh):
+                        logits, c = inner_chunk(need_logits, toks, cache,
+                                                *rest)
+                    return logits, _pin(c, cache_sh)
+            else:
+                def chunk_fn(need_logits, toks, cache, dcache, *rest):
+                    with activation_mesh(mesh):
+                        logits, c, dc = inner_chunk(need_logits, toks,
+                                                    cache, dcache, *rest)
+                    return logits, _pin(c, cache_sh), _pin(dc, draft_sh)
+
+            inner_bind = bind_fn
+
+            def bind_fn(state, *rest):
+                st, first, done0 = inner_bind(state, *rest)
+                return _pin(st, state_sh), first, done0
+
+            inner_decode = decode_fn
+
+            def decode_fn(cache, state, key):
+                with activation_mesh(mesh):
+                    c, st, nxt, done = inner_decode(cache, state, key)
+                return _pin(c, cache_sh), _pin(st, state_sh), nxt, done
+
+            if draft_model is not None:
+                inner_spec_draft = spec_draft_fn
+
+                def spec_draft_fn(dcache, vlen, state):
+                    with activation_mesh(mesh):
+                        dc, drafts = inner_spec_draft(dcache, vlen, state)
+                    return _pin(dc, draft_sh), drafts
+
+                inner_spec_verify = spec_verify_fn
+
+                def spec_verify_fn(cache, state, drafts):
+                    with activation_mesh(mesh):
+                        c, st, g, m, n_acc, done = inner_spec_verify(
+                            cache, state, drafts)
+                    return (_pin(c, cache_sh), _pin(st, state_sh), g, m,
+                            n_acc, done)
+
         # ONE jit per role; the chunk jits specialize per bucket width (the
         # buckets bound how many widths ever occur).  Mid-prompt chunks use
         # the logits-free variant — only a prompt's FINAL chunk pays the
@@ -686,13 +790,23 @@ class ContinuousEngine:
     def _flush_table(self) -> None:
         if self.manager is not None and self._table_dirty:
             self.cache = self.cache._replace(
-                table=jnp.asarray(self.manager.tables))
+                table=self._put_table(self.manager.tables,
+                                      draft=False))
             if self.draft_cache is not None:
                 # materialized separately on purpose: the two caches must
                 # never share a device buffer (both are donated to jits)
                 self.draft_cache = self.draft_cache._replace(
-                    table=jnp.asarray(self.manager.tables))
+                    table=self._put_table(self.manager.tables, draft=True))
             self._table_dirty = False
+
+    def _put_table(self, tables: np.ndarray, *, draft: bool) -> jax.Array:
+        """Upload the host block tables; on a mesh the batch dim lands
+        sharded over "data" so each data shard only holds its slots'
+        rows."""
+        if self.mesh is None:
+            return jnp.asarray(tables)
+        sh = (self._draft_sh if draft else self._cache_sh).table
+        return jax.device_put(np.asarray(tables), sh)
 
     # -- cancellation --------------------------------------------------------
 
@@ -850,14 +964,14 @@ class ContinuousEngine:
         run = self._chunk_last if final else self._chunk_mid
         caches = ((self.cache,) if self.draft_cache is None
                   else (self.cache, self.draft_cache))
-        args = (jnp.asarray(toks), *caches,
+        args = (self._put_host(toks), *caches,
                 jnp.asarray(task.slot, jnp.int32),
                 jnp.asarray(task.consumed, jnp.int32),
                 jnp.asarray(l, jnp.int32))
         if self.manager is not None:
             dst = self.manager.scatter_rows(task.slot, task.consumed, w,
                                             lo=task.cached, hi=task.plen)
-            out = run(*args, jnp.asarray(dst))
+            out = run(*args, self._put_host(dst))
         else:
             out = run(*args)
         if self.draft_cache is None:
@@ -874,6 +988,16 @@ class ContinuousEngine:
         self._prefill_tokens_padded += w
         self._prefill_chunks += 1
         return w
+
+    def _put_host(self, arr) -> jax.Array:
+        """Upload one admitted host array.  On a mesh this commits the
+        chunk onto the data axis (a single prompt's chunk has batch 1, so
+        the placement resolves to replication across the data shards);
+        off-mesh it is a plain transfer."""
+        if self.mesh is None:
+            return jnp.asarray(arr)
+        return jax.device_put(np.asarray(arr),
+                              data_sharding(self.mesh, np.shape(arr)))
 
     def _complete_prefill(self, task: _PrefillTask) -> list:
         """Sample the first token from the final chunk's logits and move

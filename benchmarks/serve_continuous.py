@@ -646,6 +646,140 @@ def run_sharded(*, smoke: bool = True, seed: int = 0) -> tuple:
     return cells, summary
 
 
+PRIORITY_DIMS = dict(batch=2, max_len=48, max_prompt_len=12)
+PRIORITY_MIX = (0.25, 0.75)  # 25% class-0 urgent, 75% class-1 default
+
+
+def _replay_counting_steps(model, cfg, trace, **engine_kwargs) -> tuple:
+    """Replay a trace counting ENGINE STEPS, not wall time: TTFT measured
+    in steps is deterministic (same seed -> same number, no CPU-timing
+    flake), which is what a CI-gated scheduling comparison needs.
+    Returns ``(tokens, ttft_steps)``, both keyed by trace index."""
+    engine = ContinuousEngine(model, cfg, **engine_kwargs)
+    pending = sorted(enumerate(trace), key=lambda p: p[1][0])
+    uid_of, submit_tick, first_step = {}, {}, {}
+    done, i, tick = [], 0, 0
+    while i < len(pending) or not engine.scheduler.idle:
+        while i < len(pending) and pending[i][1][0] <= tick:
+            idx, (_, req) = pending[i]
+            uid_of[idx] = engine.submit(req)
+            submit_tick[idx] = tick
+            i += 1
+        done.extend(engine.step())
+        for uid, _ in engine.step_events:
+            first_step.setdefault(uid, tick)  # bind emits the first token
+        tick += 1
+        if tick >= 100_000:
+            raise RuntimeError("priority trace did not drain")
+    idx_of = {u: k for k, u in uid_of.items()}
+    tokens = {idx_of[c.uid]: tuple(c.tokens) for c in done}
+    ttft_steps = {idx: first_step[uid] - submit_tick[idx]
+                  for idx, uid in uid_of.items() if uid in first_step}
+    return tokens, ttft_steps, engine
+
+
+def run_priority(*, smoke: bool = True, seed: int = 0) -> tuple:
+    """Priority + preemption scheduling cells (``--priority``).
+
+    One mixed-priority overloaded trace (25% class-0 urgent) replayed
+    five ways: priority scheduling with preemption on both KV layouts,
+    preemption off on both layouts, and a priority-stripped FIFO
+    baseline.  Asserted/gated (all step-count based, so deterministic):
+
+    * ``priority_ttft_regression`` — class-0 p95 TTFT (in engine steps)
+      under priority scheduling minus the FIFO baseline's, clamped at 0:
+      priority must beat (or tie) FIFO for the urgent class.  Hard gate 0.
+    * ``resumed_tokens_mismatch`` per layout — requests whose tokens
+      differ between the preemption-on and preemption-off replays; a
+      resumed stream that is not bit-identical hard-fails at 0.
+    * ``preempt_leaked_blocks`` / ``preempt_violations`` — 0 after drain.
+    * ``preemptions`` — the scenario must actually preempt (>= 1).
+    """
+    from repro.launch.microbench import make_cell, provenance
+
+    cfg = get_config("paper-tiny").reduced()
+    model = build_model(jax.random.PRNGKey(0), cfg)
+    n_req = 12 if smoke else 24
+    block_size = 4
+    # load 1.0 = one expected arrival per decode step on a 2-slot batch:
+    # a standing queue forms, which is the regime scheduling policy matters
+    trace = make_trace(n_req, seed=seed, load=1.0, min_prompt=4,
+                       max_prompt=10, min_new=4, max_new=10,
+                       vocab=cfg.vocab, priority_mix=PRIORITY_MIX)
+    klass = {idx: req.priority for idx, (_, req) in enumerate(trace)}
+    import dataclasses as _dc
+    fifo_trace = [(t, _dc.replace(r, priority=1)) for t, r in trace]
+
+    prov = provenance()
+    axes = dict(PRIORITY_DIMS, block_size=block_size, requests=n_req,
+                load=1.0, priority_mix=",".join(map(str, PRIORITY_MIX)))
+    paged = dict(PRIORITY_DIMS, kv_layout="paged", block_size=block_size)
+    dense = dict(PRIORITY_DIMS, kv_layout="dense")
+
+    tok_prio, ttft_prio, eng = _replay_counting_steps(
+        model, cfg, trace, **paged)
+    ps = eng.preempt_stats()
+    leaked = eng.manager.allocator.n_in_use
+    tok_off, _, _ = _replay_counting_steps(model, cfg, trace, **paged,
+                                           preemption=False)
+    dtok_on, _, deng = _replay_counting_steps(model, cfg, trace, **dense)
+    dtok_off, _, _ = _replay_counting_steps(model, cfg, trace, **dense,
+                                            preemption=False)
+    _, ttft_fifo, _ = _replay_counting_steps(model, cfg, fifo_trace, **paged)
+
+    def p95_class0(ttfts):
+        vals = [s for idx, s in ttfts.items() if klass[idx] == 0]
+        return float(np.percentile(np.asarray(vals), 95))
+
+    prio_p95, fifo_p95 = p95_class0(ttft_prio), p95_class0(ttft_fifo)
+    regression = max(0.0, prio_p95 - fifo_p95)
+    mismatch = {
+        "paged": sum(tok_prio[i] != tok_off[i] for i in tok_prio),
+        "dense": sum(dtok_on[i] != dtok_off[i] for i in dtok_on),
+    }
+    print(f"priority    : class-0 ttft p95 {prio_p95:.0f} steps "
+          f"(priority+preemption) vs {fifo_p95:.0f} steps (FIFO) "
+          f"over {sum(1 for k in klass.values() if k == 0)} urgent reqs")
+    print(f"preemption  : {ps['preemptions']} preempted / {ps['resumes']} "
+          f"resumed, violations {ps['preempt_violations']}, "
+          f"leaked blocks {leaked}, resumed-token mismatches "
+          f"{mismatch['paged']} paged / {mismatch['dense']} dense")
+    assert ps["preemptions"] >= 1, "overload scenario never preempted"
+    assert ps["preempt_violations"] == 0
+    assert leaked == 0 and deng.manager is None
+    assert mismatch == {"paged": 0, "dense": 0}, mismatch
+    assert prio_p95 <= fifo_p95, \
+        f"priority scheduling lost to FIFO for class 0: {prio_p95} vs " \
+        f"{fifo_p95} steps"
+
+    cells = [
+        make_cell("priority_ttft_regression", "class0_p95_steps", axes,
+                  {"value": regression, "priority_p95_steps": prio_p95,
+                   "fifo_p95_steps": fifo_p95}, prov, smoke=smoke),
+        make_cell("resumed_tokens_mismatch", "paged", axes,
+                  {"value": mismatch["paged"]}, prov, smoke=smoke),
+        make_cell("resumed_tokens_mismatch", "dense", axes,
+                  {"value": mismatch["dense"]}, prov, smoke=smoke),
+        make_cell("preempt_leaked_blocks", "paged", axes,
+                  {"value": leaked}, prov, smoke=smoke),
+        make_cell("preempt_violations", "paged", axes,
+                  {"value": ps["preempt_violations"]}, prov, smoke=smoke),
+        make_cell("preemptions", "paged", axes,
+                  {"value": ps["preemptions"],
+                   "resumes": ps["resumes"]}, prov, smoke=smoke),
+    ]
+    paths = sorted({f"{c['metric']}/{c['variant']}" for c in cells})
+    cells.append(make_cell("cells_emitted", "priority_serve", {},
+                           {"value": len(cells), "paths": paths}, prov,
+                           smoke=smoke))
+    summary = {"suite": "priority_serve", "smoke": smoke, "seed": seed,
+               "class0_ttft_p95_steps": {"priority": prio_p95,
+                                         "fifo": fifo_p95},
+               "preempt_stats": ps, "leaked_blocks": leaked,
+               "resumed_tokens_mismatch": mismatch, "cells": cells}
+    return cells, summary
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--smoke", action="store_true",
@@ -660,10 +794,27 @@ def main(argv=None) -> int:
                    help="run the dp x tp sharded serving sweep instead of "
                         "the replay suite (re-execs itself under 8 forced "
                         "CPU host devices when fewer than 4 are visible)")
+    p.add_argument("--priority", action="store_true",
+                   help="run the priority + preemption scheduling cells "
+                        "instead of the replay suite (step-count TTFT vs "
+                        "a FIFO baseline, resumed-token bit-identity)")
     p.add_argument("--history", default="",
-                   help="append the sharded cells to this JSONL perf "
-                        "trajectory (BENCH_history.jsonl)")
+                   help="append the sharded/priority cells to this JSONL "
+                        "perf trajectory (BENCH_history.jsonl)")
     args = p.parse_args(argv)
+    if args.priority:
+        cells, summary = run_priority(smoke=args.smoke, seed=args.seed)
+        if args.history:
+            from repro.launch.microbench import append_history
+            n = append_history(args.history, cells)
+            print(f"# appended {n} cells to {args.history}")
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(summary, f, indent=2, default=float)
+                f.write("\n")
+            print(f"wrote summary to {args.json}")
+        print("serve_continuous priority: OK")
+        return 0
     if args.sharded:
         if len(jax.devices()) < 4:
             env = dict(os.environ)

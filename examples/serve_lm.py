@@ -52,9 +52,16 @@ Poisson trace.  ``--factorize --rank R --solver svd`` serves the
 ``auto_fact``-factorized model and reports dense-vs-factorized greedy
 agreement; ``--spec-k K`` runs speculative decoding (rank-``R``
 factorized draft + dense multi-token verify, bit-exact greedy).
+``--priority-mix`` / ``--no-preemption`` / ``--aging-every`` /
+``--slo-ttft`` drive the scheduling policy: priority-class admission
+(FIFO within a class, aging-bounded starvation across classes),
+preemption of lower-priority running decodes with prefix-cache-backed
+resume (bit-identical greedy streams), and SLO-aware prefill-budget
+adaptation — see ``src/repro/serve/README.md`` §Scheduling policy.
 ``--http`` skips the offline trace entirely and serves the engine over
 HTTP (``--host`` / ``--port`` / ``--max-pending`` / ``--request-timeout``
-— see ``src/repro/serve/README.md`` §The HTTP front door).
+— per-request bodies may carry ``"priority"`` and ``"timeout_s"``; see
+``src/repro/serve/README.md`` §The HTTP front door).
 ``--mesh dp,tp`` (or ``$REPRO_MESH``) runs the engine SPMD on a
 ``{data, model}`` mesh — see ``src/repro/dist/README.md`` and
 ``src/repro/serve/README.md`` §Sharded serving.

@@ -30,9 +30,16 @@ Two driving modes:
 Per-request results carry ``status``, ``tokens``, ``finish_reason``,
 ``ttft_s``, ``latency_s``, and ``cancelled_by_client``; ``summarize``
 reduces them to the throughput/latency summary the benchmark stores and
-CI uploads.  ``--strict`` exits non-zero when the run looks broken
+CI uploads.  ``--priority-mix w0,w1,...`` assigns each request a
+priority class sampled from those weights (class 0 = most urgent) and
+the summary grows a per-class TTFT breakdown — the mixed-priority
+traffic that exercises the engine's priority admission + decode
+preemption.  ``--strict`` exits non-zero when the run looks broken
 (unreachable server, unscrapeable ``/metrics``, a request with no
-terminal outcome, or zero client cancels despite ``--cancel-frac``).
+terminal outcome, zero client cancels despite ``--cancel-frac``, a
+non-zero ``repro_serve_preempt_violations_total`` — a lower-priority
+request preempted a higher one — or KV blocks still in use after the
+engine drains, i.e. a block leak).
 """
 
 from __future__ import annotations
@@ -214,6 +221,16 @@ def summarize(results: List[dict], wall: float) -> dict:
     ttfts = [r["ttft_s"] for r in results if r["ttft_s"] is not None]
     lats = [r["latency_s"] for r in served if r["latency_s"] is not None]
     n_tok = sum(len(r["tokens"]) for r in results)
+    by_priority = {}
+    for prio in sorted({r.get("priority") for r in results
+                        if r.get("priority") is not None}):
+        sub = [r["ttft_s"] for r in results
+               if r.get("priority") == prio and r["ttft_s"] is not None]
+        by_priority[str(prio)] = {
+            "requests": sum(r.get("priority") == prio for r in results),
+            "ttft_p50_ms": pct(sub, 50) * 1e3,
+            "ttft_p95_ms": pct(sub, 95) * 1e3,
+        }
     return {
         "requests": len(results),
         "served": len(served),
@@ -232,16 +249,25 @@ def summarize(results: List[dict], wall: float) -> dict:
         "ttft_p95_ms": pct(ttfts, 95) * 1e3,
         "latency_p50_ms": pct(lats, 50) * 1e3,
         "latency_p95_ms": pct(lats, 95) * 1e3,
+        **({"by_priority": by_priority} if by_priority else {}),
     }
 
 
 def make_payloads(n: int, *, seed: int = 0, min_prompt: int = 4,
                   max_prompt: int = 24, min_new: int = 4, max_new: int = 16,
-                  vocab: int = 256,
-                  timeout_s: Optional[float] = None) -> List[dict]:
+                  vocab: int = 256, timeout_s: Optional[float] = None,
+                  priority_mix: Optional[List[float]] = None) -> List[dict]:
     """Reproducible random request bodies (mirrors ``make_trace`` dims
-    without needing a model)."""
+    without needing a model).  ``priority_mix`` = weights over priority
+    classes ``0..len(mix)-1``, sampled per request into the body."""
     rng = np.random.default_rng(seed)
+    weights = None
+    if priority_mix is not None:
+        weights = np.asarray(priority_mix, np.float64)
+        if weights.ndim != 1 or weights.size < 1 or (weights < 0).any() \
+                or weights.sum() <= 0:
+            raise ValueError("priority_mix must be non-negative weights")
+        weights = weights / weights.sum()
     out = []
     for _ in range(n):
         plen = int(rng.integers(min_prompt, max_prompt + 1))
@@ -251,8 +277,25 @@ def make_payloads(n: int, *, seed: int = 0, min_prompt: int = 4,
         }
         if timeout_s is not None:
             payload["timeout_s"] = timeout_s
+        if weights is not None:
+            payload["priority"] = int(
+                rng.choice(np.arange(weights.size), p=weights))
         out.append(payload)
     return out
+
+
+def metric_value(text: str, name: str) -> Optional[float]:
+    """Pull one un-labelled gauge/counter value out of a Prometheus
+    exposition body; ``None`` if the series is absent."""
+    for line in text.splitlines():
+        if line.startswith(name) and not line.startswith("#"):
+            rest = line[len(name):]
+            if rest[:1] in (" ", "\t"):  # exact name, not a prefix
+                try:
+                    return float(rest.strip())
+                except ValueError:
+                    return None
+    return None
 
 
 # -- CLI ---------------------------------------------------------------------
@@ -274,11 +317,13 @@ async def _amain(args) -> int:
             return 1
         await asyncio.sleep(0.2)
 
+    priority_mix = ([float(w) for w in args.priority_mix.split(",")]
+                    if args.priority_mix else None)
     payloads = make_payloads(
         args.n_requests, seed=args.seed, max_prompt=args.max_prompt,
         max_new=args.max_new, vocab=args.vocab,
         timeout_s=args.request_timeout if args.request_timeout > 0
-        else None)
+        else None, priority_mix=priority_mix)
     t0 = time.monotonic()
     if args.mode == "closed":
         results = await run_closed_loop(args.host, args.port, payloads,
@@ -291,6 +336,8 @@ async def _amain(args) -> int:
                                       seed=args.seed,
                                       timeout_s=args.timeout_s)
     wall = time.monotonic() - t0
+    for r, payload in zip(results, payloads):  # results in payload order
+        r["priority"] = payload.get("priority")
     summary = {"mode": args.mode, **summarize(results, wall)}
 
     try:
@@ -322,6 +369,29 @@ async def _amain(args) -> int:
             problems.append("cancel-frac > 0 but no client cancelled")
         if summary["served"] == 0:
             problems.append("no request was served to completion")
+        violations = metric_value(metrics_text,
+                                  "repro_serve_preempt_violations_total")
+        if violations:  # absent (no preemption support) is not a failure
+            problems.append(f"{int(violations)} preemption violation(s): "
+                            "a lower-priority request preempted a higher "
+                            "one")
+        # every stream has terminated client-side, but the engine drains
+        # its last slots asynchronously — poll briefly before calling a
+        # non-zero blocks_in_use a leak
+        in_use = metric_value(metrics_text, "repro_serve_kv_blocks_in_use")
+        for _ in range(25):
+            if not in_use:  # None (dense layout) or drained to 0
+                break
+            await asyncio.sleep(0.2)
+            try:
+                _, body = await fetch(args.host, args.port, "/metrics")
+                in_use = metric_value(body.decode("utf-8", "replace"),
+                                      "repro_serve_kv_blocks_in_use")
+            except (OSError, asyncio.TimeoutError):
+                break
+        if in_use:
+            problems.append(f"{int(in_use)} KV block(s) still in use "
+                            "after drain (leak)")
         if problems:
             print("STRICT FAILURES: " + "; ".join(problems),
                   file=sys.stderr)
@@ -347,6 +417,10 @@ def main(argv=None) -> int:
     p.add_argument("--vocab", type=int, default=256,
                    help="token-id range of the random prompts (must not "
                         "exceed the served model's vocab)")
+    p.add_argument("--priority-mix", default="",
+                   help="comma weights over priority classes 0..k-1 "
+                        "(class 0 = most urgent) sampled per request, "
+                        "e.g. 0.3,0.4,0.3; empty = all default priority")
     p.add_argument("--request-timeout", type=float, default=0.0,
                    help="per-request deadline sent in the body "
                         "(server cancels past it; 0 = none)")
@@ -360,7 +434,8 @@ def main(argv=None) -> int:
     p.add_argument("--strict", action="store_true",
                    help="exit 1 on anomalies (missing metrics, "
                         "non-terminal requests, expected-but-absent "
-                        "cancels)")
+                        "cancels, preemption priority violations, "
+                        "leaked KV blocks)")
     args = p.parse_args(argv)
     return asyncio.run(_amain(args))
 

@@ -47,6 +47,17 @@ reports the effective ``cache_kind`` in its stats; ``--decode-kernel
 pallas`` is attention-paged-only and ``--prefill-kernel pallas`` needs
 position-addressable KV lanes — both error for these families.
 
+**Scheduling policy.**  ``--priority-mix 0.2,0.8`` samples per-request
+priority classes into the trace (class 0 = most urgent; FIFO within a
+class, ``--aging-every`` bounds cross-class starvation), and the engine
+preempts running decodes of a strictly lower class when a higher-class
+head is blocked — the victim's committed blocks park on the prefix-cache
+LRU and it resumes later as a prefix-hit re-admission with a
+bit-identical greedy stream (``--no-preemption`` disables).
+``--slo-ttft S`` plugs in the SLO adapter that retunes
+``--prefill-budget`` online against an observed-TTFT p95 target.  See
+``src/repro/serve/README.md`` §Scheduling policy.
+
 ``--stream`` switches from batch replay to the streaming API: tokens are
 printed as SSE-style ``data:`` lines the moment they land
 (``ContinuousEngine.stream()`` / ``on_token``).
@@ -190,6 +201,23 @@ def main(argv=None) -> int:
     p.add_argument("--long-prompt", type=int, default=0,
                    help="prompt length of the long fraction "
                         "(default: max_prompt_len minus the shared prefix)")
+    p.add_argument("--priority-mix", default="",
+                   help="comma-separated weights over priority classes "
+                        "0..k-1 (0 = most urgent), sampled per trace "
+                        "request — e.g. '0.2,0.8' = 20%% urgent traffic "
+                        "(empty = everything class 1)")
+    p.add_argument("--no-preemption", action="store_true",
+                   help="disable decode preemption: a blocked higher-"
+                        "priority head waits instead of evicting a "
+                        "lower-priority running decode")
+    p.add_argument("--aging-every", type=int, default=16,
+                   help="starvation bound: the oldest pending class head "
+                        "is bypassed by at most this many consecutive "
+                        "admissions before being forced to run")
+    p.add_argument("--slo-ttft", type=float, default=0.0,
+                   help="TTFT SLO target in seconds: adapts the prefill "
+                        "chunk budget online against the observed p95 "
+                        "(repro.serve.slo.SloBudgetAdapter; 0 = off)")
     p.add_argument("--stream", action="store_true",
                    help="print tokens as SSE-style data: lines as they "
                         "land instead of batch stats")
@@ -267,16 +295,24 @@ def main(argv=None) -> int:
                     f"{args.arch} serves via per-slot {kind!r} state")
         print(f"# {args.arch}: per-slot {kind!r} state — paged layout / "
               "prefix cache knobs inactive")
+    priority_mix = (tuple(float(w) for w in args.priority_mix.split(","))
+                    if args.priority_mix else None)
     trace = make_trace(args.n_requests, seed=args.seed, load=args.load,
                        min_prompt=min_prompt,
                        max_prompt=args.max_prompt_len - args.shared_prefix,
                        min_new=4, max_new=args.max_new, vocab=cfg.vocab,
                        shared_prefix=args.shared_prefix,
-                       long_frac=args.long_frac, long_prompt=long_prompt)
+                       long_frac=args.long_frac, long_prompt=long_prompt,
+                       priority_mix=priority_mix)
 
     dims = dict(batch=args.batch, max_len=args.max_len,
                 max_prompt_len=args.max_prompt_len,
-                kv_layout=args.kv_layout, chunk_size=args.chunk_size)
+                kv_layout=args.kv_layout, chunk_size=args.chunk_size,
+                preemption=not args.no_preemption,
+                aging_every=args.aging_every)
+    if args.slo_ttft:
+        from repro.serve import SloBudgetAdapter
+        dims["prefill_budget_hook"] = SloBudgetAdapter(args.slo_ttft)
     if args.prefill_kernel != "reference":
         # both KV layouts take the flash prefill-chunk kernel; per-slot
         # ring/ssm families were rejected above
@@ -351,6 +387,10 @@ def main(argv=None) -> int:
     print(format_stats("dense", stats))
     print(format_kv_stats("dense", stats))
     print(format_prefill_stats("dense", stats))
+    if priority_mix or stats.get("preemptions"):
+        print(f"{'scheduling':11s}: {stats['preemptions']} preempted / "
+              f"{stats['resumes']} resumed, "
+              f"violations {stats['preempt_violations']} (must be 0)")
 
     if args.factorize:
         fact, report = auto_fact(model, args.rank, solver=args.solver,

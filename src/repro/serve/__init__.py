@@ -51,12 +51,20 @@ Five modules:
   skip it, gates same-step dependents until their provider's chunks
   publish the shared blocks, and parks freed prefix blocks on an LRU so
   hits survive idle periods.
-* ``repro.serve.scheduler`` — host lifecycle.  FIFO pending queue,
-  admit -> PREFILLING (chunks in flight) -> bind -> decode ->
-  finish/evict, slot recycling.  When the block pool cannot hold the
-  head request's reservation, admission defers (head-of-line, so FIFO
-  order is preserved and nothing starves) and resumes as finished
-  requests free their blocks.
+* ``repro.serve.scheduler`` — host lifecycle.  Priority-class pending
+  queues (0 = most urgent; FIFO within a class, an ``aging_every``
+  starvation bound across classes), deadline-aware admission
+  (``timeout_s`` drops still-queued requests at expiry), admit ->
+  PREFILLING (chunks in flight) -> bind -> decode -> finish/evict,
+  slot recycling.  When the block pool cannot hold the chosen head's
+  reservation, admission defers (head-of-line within the class, so
+  nothing starves); with ``preemption`` on, the engine instead evicts a
+  strictly-lower-priority running decode and resumes it later as a
+  prefix-hit re-admission (bit-identical greedy stream, merged
+  Completion — see ``README.md`` §Scheduling policy).
+* ``repro.serve.slo`` — ``SloBudgetAdapter``, an engine
+  ``prefill_budget_hook`` that retunes ``prefill_chunk_budget`` online
+  against a TTFT SLO target.
 * ``repro.serve.sampling`` — the one greedy/temperature sampler every
   engine shares (Gumbel-max merge of greedy and sampled rows).
 * ``repro.serve.trace`` — Poisson arrival traces (optionally with a
@@ -104,6 +112,7 @@ from repro.serve.paging import (BlockAllocator, PagedCacheManager,
                                 PrefixCache, chain_keys)
 from repro.serve.sampling import greedy_tokens, sample_tokens
 from repro.serve.scheduler import Completion, Request, Scheduler
+from repro.serve.slo import SloBudgetAdapter
 from repro.serve.trace import (bench_trace, format_kv_stats,
                                format_prefill_stats, format_stats,
                                greedy_agreement, latency_stats, make_trace,
@@ -115,4 +124,4 @@ __all__ = ["Engine", "ContinuousEngine", "generate", "Request", "Completion",
            "latency_stats", "stall_stats", "format_stats", "format_kv_stats",
            "format_prefill_stats", "bench_trace", "greedy_agreement",
            "greedy_tokens", "sample_tokens", "HttpServer",
-           "BackgroundServer", "ServeMetrics"]
+           "BackgroundServer", "ServeMetrics", "SloBudgetAdapter"]

@@ -20,6 +20,7 @@ See ``repro.serve.scheduler`` for the request lifecycle,
 
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
 from collections import deque
@@ -239,6 +240,29 @@ class ContinuousEngine:
     those dependents are *rewound* to recompute (and publish) the
     orphaned span themselves, so prefix sharing never deadlocks on a
     dead writer (see :meth:`_rewind_dependents`).
+
+    **Priority, deadlines, preemption.**  ``submit`` takes a per-request
+    ``priority`` class (0 = most urgent; default 1) and optional
+    ``timeout_s``: admission serves the best non-empty class FIFO-within-
+    class with a starvation bound (``aging_every`` — see
+    :class:`repro.serve.scheduler`), and a request still QUEUED past its
+    deadline finishes ``"cancelled"`` without ever taking a slot.  With
+    ``preemption=True`` (default) a pending head that cannot be admitted
+    — batch full, or its block reservation doesn't fit — evicts a
+    running decode of a STRICTLY worse class: the victim's lane freezes,
+    its committed blocks are registered under their prefix-chain keys
+    and parked on the retention LRU, and the remainder requeues under
+    the same uid as ``prompt ++ tokens`` with the leftover token budget
+    — resuming later as a prefix-hit admission that recomputes only the
+    partial last block.  Greedy resumed streams are bit-identical to the
+    unpreempted replay (the repo-wide guarantee extends across
+    preemption); the final :class:`Completion` merges all lives (full
+    token stream, original ``prompt_len``, true ``first_token_at``,
+    ``preemptions`` count).  Equal-priority traffic never preempts, so a
+    priority-free workload is served exactly as before.  The optional
+    ``prefill_budget_hook`` (see :class:`repro.serve.slo.SloBudgetAdapter`)
+    is called at the top of every step and may retune
+    ``prefill_chunk_budget`` against a TTFT SLO.
     """
 
     def __init__(self, model, cfg, *, batch: int, max_len: int,
@@ -254,7 +278,10 @@ class ContinuousEngine:
                  prefix_reuse: bool = True,
                  prefix_retain_blocks: Optional[int] = None,
                  draft_model=None, spec_k: int = 0,
-                 mesh=None):
+                 mesh=None,
+                 preemption: bool = True, aging_every: int = 16,
+                 prefill_budget_hook: Optional[
+                     Callable[["ContinuousEngine"], Optional[int]]] = None):
         probe = getattr(model, "cache_kind", None)
         if probe is None:
             raise UnsupportedCacheError(
@@ -442,7 +469,19 @@ class ContinuousEngine:
             self._state_sh = _SlotArrays(*(data_sharding(mesh, a.shape)
                                            for a in self.state))
             self.state = jax.device_put(self.state, self._state_sh)
-        self.scheduler = Scheduler(batch)
+        self.scheduler = Scheduler(batch, aging_every=aging_every)
+        self.preemption = preemption
+        self.prefill_budget_hook = prefill_budget_hook
+        # uid -> earlier-lives state of a preempted request (tokens already
+        # emitted, original prompt_len / first_token_at); merged into the
+        # final Completion so clients see ONE request, not its lives
+        self._resume_state: dict = {}
+        self._preemptions = 0
+        self._resumes = 0
+        self._preempt_violations = 0  # lower-preempts-higher (must stay 0)
+        # bind-time TTFT observations (seconds) for SLO adaptation hooks
+        self.recent_ttfts: deque = deque(maxlen=256)
+        self.hook_errors: deque = deque(maxlen=64)
         self._base_key = jax.random.PRNGKey(seed)
         self._tick = 0
         self._prefills: dict = {}  # slot -> _PrefillTask
@@ -711,12 +750,17 @@ class ContinuousEngine:
 
     def submit(self, prompt, *, max_new_tokens: Optional[int] = None,
                temperature: float = 0.0,
-               stop_ids: Sequence[int] = ()) -> int:
-        """Queue one request; returns its uid (FIFO admission).
+               stop_ids: Sequence[int] = (), priority: int = 1,
+               timeout_s: Optional[float] = None) -> int:
+        """Queue one request; returns its uid (priority-class admission,
+        FIFO within a class — see :class:`repro.serve.scheduler`).
 
         ``prompt`` is either a token-id sequence (with ``max_new_tokens``
         etc. given here) or a prebuilt :class:`Request` — both go through
-        the same engine-limit validation."""
+        the same engine-limit validation.  ``priority`` is the admission
+        class (0 = most urgent, default 1); ``timeout_s`` a deadline the
+        engine enforces while the request is still QUEUED (a request that
+        cannot start in time finishes ``"cancelled"``)."""
         if isinstance(prompt, Request):
             req = prompt
         else:
@@ -724,7 +768,8 @@ class ContinuousEngine:
                 raise ValueError("max_new_tokens is required")
             req = Request(prompt=np.asarray(prompt, np.int32),
                           max_new_tokens=max_new_tokens,
-                          temperature=temperature, stop_ids=tuple(stop_ids))
+                          temperature=temperature, stop_ids=tuple(stop_ids),
+                          priority=priority, timeout_s=timeout_s)
         if req.prompt.size > self.max_prompt_len:
             raise ValueError(
                 f"prompt length {req.prompt.size} > max_prompt_len "
@@ -757,8 +802,9 @@ class ContinuousEngine:
     # -- serving loop --------------------------------------------------------
 
     def _next_admission(self):
-        """FIFO head-of-line admission; the paged layout additionally gates
-        on the head request's block reservation fitting the free pool."""
+        """Priority-class head-of-line admission (FIFO within a class);
+        the paged layout additionally gates on the chosen head's block
+        reservation fitting the free pool."""
         if self.manager is None:
             return self.scheduler.next_admission()
         return self.scheduler.next_admission(
@@ -900,6 +946,99 @@ class ContinuousEngine:
             task.consumed = new_start
             task.hit_bids = task.hit_bids[:idx]
 
+    # -- preemption ----------------------------------------------------------
+
+    def _maybe_preempt(self) -> None:
+        """Evict running decodes so a blocked higher-priority pending head
+        can start.  A victim's priority must be STRICTLY worse (larger)
+        than the head's — equal-priority traffic never preempts, so a
+        priority-free workload behaves exactly as before.  Victims are
+        the worst-priority running slots, youngest first; prefilling
+        slots are never preempted (their compute is the very thing
+        preemption tries to reallocate).  Bounded by the batch size per
+        step."""
+        sched = self.scheduler
+        for _ in range(self.batch):
+            head = sched.peek_next()
+            if head is None:
+                return
+            fits = (self.manager is None
+                    or self.manager.can_admit(head.prompt,
+                                              self._total_tokens(head)))
+            if sched.free_slot() is not None and fits:
+                return  # head is admissible as-is
+            victims = [(s.request.priority, s.request.uid, slot)
+                       for slot, s in enumerate(sched.slots)
+                       if s is not None
+                       and s.request.priority > head.priority]
+            if not victims:
+                return
+            prio, _, slot = max(victims)
+            if prio <= head.priority:
+                # unreachable by construction (the filter above is strict);
+                # counted defensively — the loadgen --strict gate and the
+                # /metrics scrape assert this stays 0
+                self._preempt_violations += 1
+                return
+            self._preempt_slot(slot)
+
+    def _preempt_slot(self, slot: int) -> None:
+        """Park a running decode and requeue its remainder.
+
+        The victim's lane freezes exactly like a cancel; its cache holds
+        ``prompt ++ tokens[:-1]`` (the last sampled token was still
+        waiting in ``state.tok`` for the next decode).  On the paged
+        layout those committed full blocks are registered under their
+        chain keys and parked on the retention LRU at release, so the
+        resume — a re-submission of ``prompt ++ tokens`` with the
+        remaining token budget, under the SAME uid — comes back as a
+        prefix hit that recomputes only the partial last block.  Greedy
+        decoding is deterministic, so the resumed stream is bit-identical
+        to the unpreempted replay; a sampled (temperature > 0) request
+        resumes with fresh randomness."""
+        self.state = self.state._replace(
+            active=self.state.active.at[slot].set(False))
+        pos = int(np.asarray(self.cache.length)[0, slot])
+        req, tokens, first_at = self.scheduler.preempt(slot)
+        k = len(tokens)
+        assert pos == req.prompt.size + k - 1, \
+            f"preempt pos {pos} != plen {req.prompt.size} + {k} - 1"
+        if self.manager is not None:
+            committed = np.concatenate(
+                [req.prompt, np.asarray(tokens[:-1], np.int32)])
+            self.manager.register_chain(slot, committed)
+        self._release_slot(slot)
+        prior = self._resume_state.get(req.uid)
+        self._resume_state[req.uid] = {
+            "tokens": (prior["tokens"] if prior else []) + list(tokens),
+            "prompt_len": (prior["prompt_len"] if prior
+                           else int(req.prompt.size)),
+            "first_token_at": (prior["first_token_at"] if prior
+                               else first_at),
+            "preemptions": (prior["preemptions"] if prior else 0) + 1,
+        }
+        resume = dataclasses.replace(
+            req,
+            prompt=np.concatenate([req.prompt,
+                                   np.asarray(tokens, np.int32)]),
+            max_new_tokens=req.max_new_tokens - k)
+        self.scheduler.requeue(resume)
+        self._preemptions += 1
+
+    def _merge_resume(self, comp: Completion) -> Completion:
+        """Fold a resumed request's earlier lives into its final
+        Completion: the client sees the original prompt_len, the full
+        token stream, the true first-token time, and how many times the
+        request was preempted along the way."""
+        st = self._resume_state.pop(comp.uid, None)
+        if st is None:
+            return comp
+        comp.tokens = st["tokens"] + comp.tokens
+        comp.prompt_len = st["prompt_len"]
+        comp.first_token_at = st["first_token_at"]
+        comp.preemptions = st["preemptions"]
+        return comp
+
     def _emit(self, uid: int, token: int) -> None:
         self._step_events.append((uid, int(token)))
         if self.on_token is not None:
@@ -1013,6 +1152,10 @@ class ContinuousEngine:
             jnp.asarray(stop_row), self._next_key())
         del self._prefills[task.slot]
         self.scheduler.bind(task.slot, req, int(first))
+        if req.uid in self._resume_state:
+            self._resumes += 1  # resumed life: its bind is not a real TTFT
+        else:
+            self.recent_ttfts.append(time.monotonic() - req.submitted_at)
         self._emit(req.uid, int(first))
         if bool(done0):
             return [self._finish(task.slot, task.plen)]
@@ -1058,7 +1201,18 @@ class ContinuousEngine:
         (cancelled ones included)."""
         t0 = time.monotonic()
         self._step_events = []
+        if self.prefill_budget_hook is not None:
+            try:
+                budget = self.prefill_budget_hook(self)
+                if budget is not None:
+                    self.prefill_chunk_budget = max(1, int(budget))
+            except Exception as exc:
+                # an operator hook bug must not take serving down
+                self.hook_errors.append(repr(exc))
         finished = self._drain_cancels()
+        finished.extend(self.scheduler.expire_pending())
+        if self.preemption:
+            self._maybe_preempt()
         while (adm := self._next_admission()) is not None:
             self._begin_prefill(*adm)
         prefill_spent = 0
@@ -1106,7 +1260,7 @@ class ContinuousEngine:
             "prefill_tokens": prefill_spent,
             "decoded": bool(running),
         })
-        return finished
+        return [self._merge_resume(c) for c in finished]
 
     # -- introspection -------------------------------------------------------
 
@@ -1224,12 +1378,30 @@ class ContinuousEngine:
                                      if drafted else 0.0),
         }
 
+    def preempt_stats(self) -> dict:
+        """Preemption accounting.  ``preempt_violations`` counts evictions
+        where the victim did not outrank the preemptor's class — the
+        policy guarantees 0 and the loadgen/CI gates assert it;
+        ``preempted_in_flight`` is how many preempted requests currently
+        await (or are mid-) resume."""
+        return {
+            "preemption": self.preemption,
+            "preemptions": self._preemptions,
+            "resumes": self._resumes,
+            "preempt_violations": self._preempt_violations,
+            "preempted_in_flight": len(self._resume_state),
+        }
+
     def reset_stats(self) -> None:
         """Zero the prefill/step accounting (e.g. after a compile warmup)
         without touching the serving state.  The KV peak rebases to the
         blocks currently in use, so ``kv_peak_resident_bytes`` reflects the
         profiled traffic, not the warmup's high-water mark."""
         self.step_log = deque(maxlen=65536)
+        self._preemptions = 0
+        self._resumes = 0
+        self._preempt_violations = 0
+        self.recent_ttfts.clear()
         self._prompt_tokens_admitted = 0
         self._prefill_tokens_computed = 0
         self._prefill_tokens_padded = 0

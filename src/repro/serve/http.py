@@ -16,7 +16,11 @@ framework.  One event loop owns three things:
 
   - ``POST /v1/generate`` — body ``{"prompt": [ids...],
     "max_new_tokens": N, "temperature": T, "stop_ids": [...],
-    "timeout_s": S, "stream": true|false}``.  Streams tokens as
+    "priority": P, "timeout_s": S, "stream": true|false}``.
+    ``priority`` (0 = most urgent, default 1) and ``timeout_s`` ride
+    into the engine, so admission is priority-class aware and a request
+    still QUEUED past its deadline is dropped engine-side (the route
+    deadline below covers it once running).  Streams tokens as
     Server-Sent Events (``data: {"id": uid, "token": t}`` per token,
     then ``event: done`` with the finish reason and counts), or — with
     ``"stream": false`` — returns one JSON object after the request
@@ -75,16 +79,22 @@ class ServeMetrics:
     TTFT/latency are bounded reservoirs (last ``maxlen`` completions), so
     the quantiles are over recent traffic and a long-lived server never
     grows.  Completions cancelled before their first token carry no TTFT
-    sample (``first_token_at == 0``)."""
+    sample (``first_token_at == 0``), and cancelled completions land in
+    their OWN latency reservoir (``repro_serve_cancelled_latency_seconds``)
+    — a storm of instantly-cancelled requests must not drag the served
+    p50/p95 down.  TTFT is additionally bucketed per priority class."""
 
     def __init__(self, maxlen: int = 4096):
+        self.maxlen = maxlen
         self.http_requests: dict = {}   # (route, code) -> count
         self.completions: dict = {}     # finish_reason -> count
         self.tokens_streamed = 0
         self.rejected_backpressure = 0
         self.cancelled = {"disconnect": 0, "deadline": 0}
         self.ttft_s: deque = deque(maxlen=maxlen)
-        self.latency_s: deque = deque(maxlen=maxlen)
+        self.ttft_by_priority: dict = {}  # priority -> deque of ttfts
+        self.latency_s: deque = deque(maxlen=maxlen)          # served only
+        self.cancelled_latency_s: deque = deque(maxlen=maxlen)
 
     def count_request(self, route: str, code: int) -> None:
         key = (route, code)
@@ -95,7 +105,13 @@ class ServeMetrics:
         self.completions[r] = self.completions.get(r, 0) + 1
         if completion.first_token_at > 0:
             self.ttft_s.append(completion.ttft)
-        self.latency_s.append(completion.latency)
+            prio = getattr(completion, "priority", 1)
+            self.ttft_by_priority.setdefault(
+                prio, deque(maxlen=self.maxlen)).append(completion.ttft)
+        if r == "cancelled":
+            self.cancelled_latency_s.append(completion.latency)
+        else:
+            self.latency_s.append(completion.latency)
 
     def render(self, engine) -> str:
         """Prometheus text format; merges the engine's own stats so one
@@ -130,6 +146,25 @@ class ServeMetrics:
             metric("repro_serve_latency_seconds",
                    _quantile(self.latency_s, q),
                    labels=f'{{quantile="{q}"}}')
+            metric("repro_serve_cancelled_latency_seconds",
+                   _quantile(self.cancelled_latency_s, q),
+                   labels=f'{{quantile="{q}"}}')
+        for prio in sorted(self.ttft_by_priority):
+            for q in (0.5, 0.95):
+                metric("repro_serve_ttft_seconds",
+                       _quantile(self.ttft_by_priority[prio], q),
+                       labels=f'{{quantile="{q}",priority="{prio}"}}')
+
+        pe = engine.preempt_stats()
+        metric("repro_serve_preemptions_total", pe["preemptions"],
+               "Running decodes preempted for a higher-priority admission",
+               "counter")
+        metric("repro_serve_preempt_resumes_total", pe["resumes"],
+               "Preempted requests whose resume re-bound", "counter")
+        metric("repro_serve_preempt_violations_total",
+               pe["preempt_violations"],
+               "Preemptions whose victim did not outrank the preemptor "
+               "(must be 0)", "counter")
 
         sched = engine.scheduler
         metric("repro_serve_queue_pending", sched.n_pending,
@@ -347,7 +382,15 @@ class HttpServer:
                 np.asarray(prompt, np.int32),
                 max_new_tokens=int(payload.get("max_new_tokens", 16)),
                 temperature=float(payload.get("temperature", 0.0)),
-                stop_ids=tuple(payload.get("stop_ids", ())))
+                stop_ids=tuple(payload.get("stop_ids", ())),
+                priority=int(payload.get("priority", 1)),
+                # the engine enforces this while the request is QUEUED;
+                # the route deadline below covers it once running (and
+                # owns non-positive timeouts = already expired, which
+                # the engine's Request validation does not admit)
+                timeout_s=(float(timeout_s)
+                           if timeout_s is not None and float(timeout_s) > 0
+                           else None))
         except (ValueError, TypeError) as exc:
             self._respond(writer, route, 400,
                           json.dumps({"error": str(exc)}).encode())

@@ -336,6 +336,36 @@ class PagedCacheManager:
         chunks have covered it)."""
         return all(b not in self._pending for b in bids)
 
+    def register_chain(self, slot: int, committed: np.ndarray) -> int:
+        """Register ``slot``'s blocks holding ``committed`` (the tokens its
+        cache rows actually contain — prompt plus generated-so-far) under
+        their chain keys, so they become prefix-hittable.  Preemption
+        calls this right before ``release``: the victim's full blocks park
+        on the retention LRU and its resume re-admission hits them,
+        recomputing nothing already written.
+
+        Only FULL blocks are keyed (the partial last block is recomputed
+        on resume, like any prompt tail), and every keyed block is fully
+        written — so nothing here joins ``_pending``.  A key already held
+        by another block is left alone: that holder has identical content
+        (equal chain keys imply equal prefixes), so the resume hits it
+        instead.  Returns the number of newly registered blocks."""
+        if not self.prefix_reuse:
+            return 0
+        keys = chain_keys(committed, self.block_size)
+        blocks = self._owned[slot]
+        added = 0
+        for i, key in enumerate(keys[:len(blocks)]):
+            bid = blocks[i]
+            held = self.prefix.get(key)
+            if held is not None:
+                continue  # ours (no-op) or an equal-content block: hittable
+            if self.prefix.has_block(bid):
+                self.prefix.drop_block(bid)  # stale key from a prior life
+            self.prefix.put(key, bid)
+            added += 1
+        return added
+
     # -- release --------------------------------------------------------------
 
     def release(self, slot: int) -> Tuple[int, ...]:

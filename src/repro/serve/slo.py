@@ -1,0 +1,93 @@
+"""SLO-aware adaptation of the engine's prefill chunk budget.
+
+``prefill_chunk_budget`` trades TTFT against decode throughput: a bigger
+budget drains the prefill backlog faster (queued prompts bind sooner),
+a smaller one spends more of each step on running decodes.  The right
+value depends on load, so :class:`SloBudgetAdapter` retunes it online
+against a time-to-first-token target: plug one in as
+``ContinuousEngine(prefill_budget_hook=...)`` and the engine calls it at
+the top of every ``step()`` with itself as the argument; a non-``None``
+return becomes the new budget.
+
+The control law is deliberately boring — multiplicative increase when
+the observed TTFT p95 misses the target, multiplicative decrease when it
+sits comfortably under half of it, clamped to
+``[min_budget, max_budget]`` and fed by the engine's bind-time
+``recent_ttfts`` deque (resumed lives of preempted requests are excluded
+there, so preemption does not pollute the signal).  Hysteresis comes
+from the observation window: the adapter only moves after ``window``
+fresh observations since its last move.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+class SloBudgetAdapter:
+    """Retune ``prefill_chunk_budget`` against a TTFT SLO.
+
+    Parameters
+    ----------
+    target_ttft_s:
+        The SLO: observed bind-time TTFT p95 should sit at or under this.
+    min_budget / max_budget:
+        Clamp for the adapted budget.  ``min_budget`` defaults to the
+        engine's largest bucket width (so one full chunk always fits a
+        step); ``max_budget`` defaults to 8x the engine's starting
+        budget.
+    window:
+        Fresh TTFT observations required between moves (also the number
+        of most-recent observations the p95 is computed over).
+    grow / shrink:
+        Multiplicative step applied on miss / comfortable-hit.
+    """
+
+    def __init__(self, target_ttft_s: float, *,
+                 min_budget: Optional[int] = None,
+                 max_budget: Optional[int] = None,
+                 window: int = 16, grow: float = 2.0, shrink: float = 0.5):
+        if not target_ttft_s > 0:
+            raise ValueError("need target_ttft_s > 0")
+        if window < 1:
+            raise ValueError("need window >= 1")
+        if not (grow > 1.0 and 0.0 < shrink < 1.0):
+            raise ValueError("need grow > 1 and 0 < shrink < 1")
+        self.target_ttft_s = target_ttft_s
+        self.min_budget, self.max_budget = min_budget, max_budget
+        self.window, self.grow, self.shrink = window, grow, shrink
+        self.adaptations = 0   # budget moves applied
+        self.last_p95 = float("nan")
+        self._seen = 0         # engine TTFT observations consumed so far
+
+    def __call__(self, engine) -> Optional[int]:
+        total = len(engine.recent_ttfts)
+        if total - self._seen < self.window:
+            return None  # not enough fresh signal since the last move
+        self._seen = total
+        ttfts = list(engine.recent_ttfts)[-self.window:]
+        p95 = self.last_p95 = float(np.percentile(ttfts, 95))
+        lo = (max(engine.buckets) if self.min_budget is None
+              else self.min_budget)
+        hi = (8 * engine.prefill_chunk_budget if self.max_budget is None
+              else self.max_budget)
+        if self.max_budget is None:
+            # resolve the default cap ONCE, against the starting budget —
+            # a ratcheting cap would make the ceiling unbounded
+            self.max_budget = hi
+        cur = engine.prefill_chunk_budget
+        if p95 > self.target_ttft_s:
+            new = min(hi, int(cur * self.grow))
+        elif p95 < 0.5 * self.target_ttft_s:
+            new = max(lo, int(cur * self.shrink))
+        else:
+            return None
+        if new == cur:
+            return None
+        self.adaptations += 1
+        return new
+
+
+__all__ = ["SloBudgetAdapter"]

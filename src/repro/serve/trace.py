@@ -13,7 +13,7 @@ admission genuinely interleaves with in-flight decoding — and
 from __future__ import annotations
 
 import time
-from typing import List, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -26,6 +26,8 @@ def make_trace(n_requests: int, *, seed: int = 0, load: float = 0.25,
                temperature: float = 0.0, vocab: int = 256,
                shared_prefix: int = 0, long_frac: float = 0.0,
                long_prompt: int = 0,
+               priority_mix: Optional[Sequence[float]] = None,
+               timeout_s: Optional[float] = None,
                ) -> List[Tuple[float, Request]]:
     """Sample a reproducible trace of variable-length requests.
 
@@ -36,12 +38,25 @@ def make_trace(n_requests: int, *, seed: int = 0, load: float = 0.25,
     ``long_frac``/``long_prompt`` mix in a heavy tail: each request is,
     with probability ``long_frac``, a ``long_prompt``-token prompt instead
     of a ``[min_prompt, max_prompt]`` draw — the mixed long/short workload
-    where monolithic prefill stalls decode and chunked prefill must not."""
+    where monolithic prefill stalls decode and chunked prefill must not.
+
+    ``priority_mix`` turns on mixed-priority traffic: weights over the
+    priority classes ``0..len(mix)-1`` (e.g. ``(0.2, 0.8)`` = 20% class-0
+    urgent, 80% class-1), sampled per request.  ``timeout_s`` stamps the
+    same queued-admission deadline onto every request."""
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / max(load, 1e-6), n_requests)
     arrivals = np.cumsum(gaps)
     prefix = (rng.integers(0, vocab, shared_prefix).astype(np.int32)
               if shared_prefix else None)
+    classes = weights = None
+    if priority_mix is not None:
+        weights = np.asarray(priority_mix, np.float64)
+        if weights.ndim != 1 or weights.size < 1 or (weights < 0).any() \
+                or weights.sum() <= 0:
+            raise ValueError("priority_mix must be non-negative weights")
+        weights = weights / weights.sum()
+        classes = np.arange(weights.size)
     trace = []
     for t in arrivals:
         plen = int(rng.integers(min_prompt, max_prompt + 1))
@@ -54,6 +69,9 @@ def make_trace(n_requests: int, *, seed: int = 0, load: float = 0.25,
             prompt=prompt,
             max_new_tokens=int(rng.integers(min_new, max_new + 1)),
             temperature=temperature,
+            priority=(int(rng.choice(classes, p=weights))
+                      if classes is not None else 1),
+            timeout_s=timeout_s,
         )))
     return trace
 
@@ -147,6 +165,7 @@ def bench_trace(model, cfg, trace: List[Tuple[float, Request]], *,
     stats.update(engine.kv_stats())
     stats.update(engine.prefill_stats())
     stats.update(stall_stats(engine.step_log))
+    stats.update(engine.preempt_stats())
     if engine.spec_k:
         stats.update(engine.spec_stats())
     return completions, stats

@@ -382,3 +382,99 @@ def test_http_open_loop_with_cancels_leaks_nothing(setup):
         _wait_drained(eng)
         assert bg.server.metrics.completions.get("cancelled", 0) >= 1
     _assert_pool_clean(eng)
+
+
+# ---- metrics reservoir split + priority passthrough -------------------------
+
+
+def test_metrics_split_cancelled_from_served_latency():
+    """``Metrics.observe`` used to append cancelled latencies into the
+    same reservoir as served ones — a storm of instant cancels dragged
+    the served p50/p95 toward zero.  The reservoirs are now split."""
+    from repro.serve.http import ServeMetrics
+    from repro.serve.scheduler import Completion
+
+    m = ServeMetrics()
+    for i in range(4):
+        m.observe(Completion(uid=i, prompt_len=4, tokens=[1] * 8,
+                             finish_reason="length", priority=0,
+                             submitted_at=0.0, first_token_at=1.0,
+                             finished_at=10.0))
+    for i in range(4, 8):  # instant cancels, never produced a token
+        m.observe(Completion(uid=i, prompt_len=4, tokens=[],
+                             finish_reason="cancelled",
+                             submitted_at=0.0, first_token_at=0.0,
+                             finished_at=0.001))
+    assert list(m.latency_s) == [10.0] * 4      # served reservoir clean
+    assert list(m.cancelled_latency_s) == [0.001] * 4
+    assert len(m.ttft_s) == 4                   # tokenless cancels skipped
+    assert set(m.ttft_by_priority) == {0}
+    assert m.completions == {"length": 4, "cancelled": 4}
+
+
+def test_http_metrics_expose_priority_and_preemption_series(server):
+    bg, eng = server[0], server[1]
+
+    async def drive():
+        rng = np.random.default_rng(12)
+        payload = {"prompt": rng.integers(0, 64, 6).tolist(),
+                   "max_new_tokens": 4, "priority": 0}
+        r = await sse_generate(bg.host, bg.port, payload)
+        assert r["status"] == 200 and r["finish_reason"] == "length"
+        _, body = await fetch(bg.host, bg.port, "/metrics")
+        return body.decode()
+
+    text = asyncio.run(drive())
+    for name in ('repro_serve_cancelled_latency_seconds{quantile="0.5"}',
+                 'repro_serve_ttft_seconds{quantile="0.95",priority="0"}',
+                 "repro_serve_preemptions_total",
+                 "repro_serve_preempt_resumes_total",
+                 "repro_serve_preempt_violations_total"):
+        assert name in text, f"{name} missing from /metrics"
+    from repro.launch.loadgen import metric_value
+    assert metric_value(text, "repro_serve_preempt_violations_total") == 0.0
+    _wait_drained(eng)
+
+
+def test_http_priority_payload_reaches_scheduler(setup):
+    """A body ``"priority"`` rides through the route into the engine: a
+    class-0 POST overtakes an earlier-queued default-class request.
+    (``preemption=False`` so admission order alone proves the plumbing —
+    uids are issued in submission order, so the urgent request is the
+    LARGEST uid yet must bind before the middle one.)"""
+    model, cfg = setup
+    eng = _engine(model, cfg, batch=1, preemption=False)
+    with BackgroundServer(eng, max_pending=8) as bg:
+
+        async def drive():
+            rng = np.random.default_rng(13)
+
+            def payload(prio, max_new=4):
+                return {"prompt": rng.integers(0, cfg.vocab, 6).tolist(),
+                        "max_new_tokens": max_new, "priority": prio}
+
+            # a long filler holds the single slot while the queue forms
+            filler = asyncio.ensure_future(
+                sse_generate(bg.host, bg.port, payload(1, max_new=48)))
+            while eng.scheduler.n_running + eng.scheduler.n_prefilling < 1:
+                await asyncio.sleep(0.01)
+            # queue: default-class first, then an urgent class-0
+            low = asyncio.ensure_future(
+                sse_generate(bg.host, bg.port, payload(1)))
+            while eng.scheduler.n_pending < 1:
+                await asyncio.sleep(0.01)
+            high = asyncio.ensure_future(
+                sse_generate(bg.host, bg.port, payload(0)))
+            while eng.scheduler.n_pending < 2:  # both queued together
+                await asyncio.sleep(0.01)
+            return await asyncio.gather(filler, low, high)
+
+        rf, rl, rh = asyncio.run(drive())
+        assert all(r["status"] == 200 for r in (rf, rl, rh))
+        assert all(r["finish_reason"] == "length" for r in (rf, rl, rh))
+        _wait_drained(eng)
+        order = list(eng.scheduler.admitted)[-3:]
+        assert len(order) == 3
+        assert order[1] > order[2], (
+            f"urgent request did not jump the default-class queue: {order}")
+    _assert_pool_clean(eng)

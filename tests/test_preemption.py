@@ -1,0 +1,259 @@
+"""Decode preemption: a lower-priority running decode is evicted so a
+blocked higher-priority arrival can start, then resumed later as a
+prefix-hit re-admission — and the resumed stream must be BIT-IDENTICAL
+to an unpreempted replay.
+
+The differential matrix runs on both KV layouts: paged (resume re-enters
+through the prefix cache, recomputing at most the partial last block +
+final token) and dense (resume is a full recompute — still required to
+be bit-identical).  Scheduler-level priority/aging/cancel contracts live
+in ``tests/test_priority_sched.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import ContinuousEngine, SloBudgetAdapter, generate
+
+LAYOUTS = [
+    dict(kv_layout="paged", block_size=4),
+    dict(kv_layout="dense"),
+]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("paper-tiny").reduced()
+    model = build_model(jax.random.PRNGKey(0), cfg)
+    return model, cfg
+
+
+def _baseline(model, cfg, prompt, n, max_len=32):
+    cache = model.init_cache(1, max_len, cfg, dtype=jnp.float32)
+    out, _ = generate(model, jnp.asarray(prompt)[None, :], cache, n_steps=n)
+    return np.asarray(out)[0]
+
+
+def _prompts(lengths, vocab, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, n).astype(np.int32) for n in lengths]
+
+
+def _preempt_scenario(model, cfg, layout_kw, *, preemption=True, steps=8):
+    """Fill the batch with low-priority decodes, let them run ``steps``
+    steps, then submit high-priority arrivals that need their slots.
+    Returns (engine, [(uid, prompt, n_new)])."""
+    eng = ContinuousEngine(model, cfg, batch=2, max_len=32,
+                           max_prompt_len=12, preemption=preemption,
+                           **layout_kw)
+    low = _prompts([8, 8], cfg.vocab, seed=0)
+    high = _prompts([6, 6], cfg.vocab, seed=1)
+    jobs = []
+    for p in low:
+        jobs.append((eng.submit(p, max_new_tokens=12, priority=2), p, 12))
+    for _ in range(steps):
+        eng.step()
+    assert eng.scheduler.n_running == 2
+    for p in high:
+        jobs.append((eng.submit(p, max_new_tokens=6, priority=0), p, 6))
+    return eng, jobs
+
+
+# ---- the differential matrix ------------------------------------------------
+
+
+@pytest.mark.parametrize("layout_kw", LAYOUTS,
+                         ids=[k["kv_layout"] for k in LAYOUTS])
+def test_preempt_resume_bit_identical(setup, layout_kw):
+    model, cfg = setup
+    eng, jobs = _preempt_scenario(model, cfg, layout_kw)
+    comps = {c.uid: c for c in eng.run()}
+    ps = eng.preempt_stats()
+    assert ps["preemptions"] >= 1, "scenario failed to force a preemption"
+    assert ps["resumes"] >= 1
+    assert ps["preempt_violations"] == 0
+    assert ps["preempted_in_flight"] == 0  # every life merged back
+    for uid, prompt, n in jobs:
+        c = comps[uid]
+        assert c.finish_reason == "length"
+        np.testing.assert_array_equal(
+            np.array(c.tokens), _baseline(model, cfg, prompt, n),
+            err_msg=f"{layout_kw['kv_layout']} uid {uid} diverged")
+    # preempted completions are attributed, high-priority ones untouched
+    preempted = [c for c in comps.values() if c.preemptions > 0]
+    assert preempted and all(c.priority == 2 for c in preempted)
+    # no client-visible completion may leak the internal reason
+    assert all(c.finish_reason != "preempted" for c in comps.values())
+
+
+@pytest.mark.parametrize("layout_kw", LAYOUTS,
+                         ids=[k["kv_layout"] for k in LAYOUTS])
+def test_preemption_releases_all_blocks(setup, layout_kw):
+    model, cfg = setup
+    eng, _ = _preempt_scenario(model, cfg, layout_kw)
+    eng.run()
+    if eng.manager is not None:
+        assert eng.manager.fully_free
+        assert eng.manager.allocator.n_in_use == 0
+
+
+def test_paged_resume_is_a_prefix_hit(setup):
+    """The resumed request's committed tokens re-enter through the prefix
+    cache — full blocks are skipped, not recomputed."""
+    model, cfg = setup
+    eng, _ = _preempt_scenario(model, cfg, dict(kv_layout="paged",
+                                                block_size=4))
+    eng.reset_stats()
+    eng.run()
+    assert eng.preempt_stats()["resumes"] >= 1
+    assert eng.prefill_stats()["prefix_skipped_tokens"] > 0
+
+
+@pytest.mark.parametrize("layout_kw", LAYOUTS,
+                         ids=[k["kv_layout"] for k in LAYOUTS])
+def test_preemption_off_still_serves_identically(setup, layout_kw):
+    """``preemption=False`` degrades to pure priority admission: nothing
+    is evicted, outputs stay bit-identical, high-priority arrivals simply
+    wait for a free slot."""
+    model, cfg = setup
+    eng, jobs = _preempt_scenario(model, cfg, layout_kw, preemption=False)
+    comps = {c.uid: c for c in eng.run()}
+    assert eng.preempt_stats()["preemptions"] == 0
+    for uid, prompt, n in jobs:
+        np.testing.assert_array_equal(
+            np.array(comps[uid].tokens), _baseline(model, cfg, prompt, n))
+        assert comps[uid].preemptions == 0
+
+
+def test_cancel_while_awaiting_resume_merges_earlier_tokens(setup):
+    """Cancelling a preempted request while it waits in the resume queue
+    must return its already-generated tokens under ``"cancelled"`` — the
+    client streamed them, the completion cannot pretend they never
+    happened."""
+    model, cfg = setup
+    eng, jobs = _preempt_scenario(model, cfg, dict(kv_layout="paged",
+                                                   block_size=4))
+    # step until a preemption parks at least one low-priority request
+    for _ in range(64):
+        eng.step()
+        if eng.preempt_stats()["preempted_in_flight"] > 0:
+            break
+    assert eng.preempt_stats()["preempted_in_flight"] > 0
+    low_uids = {uid for uid, _, n in jobs if n == 12}
+    parked = [r.uid for r in eng.scheduler.pending if r.uid in low_uids]
+    assert parked
+    victim = parked[0]
+    assert eng.cancel(victim)
+    comps = {c.uid: c for c in eng.run()}
+    c = comps[victim]
+    assert c.finish_reason == "cancelled"
+    assert len(c.tokens) > 0, "earlier-life tokens lost on cancel"
+    assert c.preemptions >= 1 and c.first_token_at > 0
+    prompt = {uid: p for uid, p, _ in jobs}[victim]
+    np.testing.assert_array_equal(
+        np.array(c.tokens),
+        _baseline(model, cfg, prompt, 12)[:len(c.tokens)])
+    if eng.manager is not None:
+        assert eng.manager.fully_free
+
+
+def test_repeated_preemption_accumulates(setup):
+    """A request preempted more than once still merges into ONE
+    completion with the full stream and the right count."""
+    model, cfg = setup
+    eng = ContinuousEngine(model, cfg, batch=1, max_len=48,
+                           max_prompt_len=12, kv_layout="paged",
+                           block_size=4)
+    prompt = _prompts([6], cfg.vocab, seed=3)[0]
+    uid = eng.submit(prompt, max_new_tokens=16, priority=3)
+    done = []
+    interrupts = 0
+    for _ in range(400):
+        done.extend(eng.step())
+        if any(c.uid == uid for c in done):
+            break
+        # whenever the victim is mid-decode, throw an urgent job at it
+        if (interrupts < 2
+                and eng.scheduler.find(uid)[0] == "running"
+                and eng.scheduler.n_pending == 0):
+            eng.submit(_prompts([4], cfg.vocab, seed=10 + interrupts)[0],
+                       max_new_tokens=2, priority=0)
+            interrupts += 1
+    comps = {c.uid: c for c in done}
+    assert uid in comps, "victim never finished"
+    c = comps[uid]
+    assert c.preemptions == 2
+    np.testing.assert_array_equal(np.array(c.tokens),
+                                  _baseline(model, cfg, prompt, 16,
+                                            max_len=48))
+    assert eng.manager.fully_free
+
+
+# ---- SLO budget adapter -----------------------------------------------------
+
+
+class _FakeEngine:
+    def __init__(self, budget=8, buckets=(4, 8)):
+        self.prefill_chunk_budget = budget
+        self.buckets = buckets
+        self.recent_ttfts = []
+
+
+def test_slo_adapter_grows_on_miss_and_shrinks_on_slack():
+    eng = _FakeEngine(budget=8)
+    adapter = SloBudgetAdapter(0.1, window=4)
+    assert adapter(eng) is None  # no signal yet
+    eng.recent_ttfts = [0.5] * 4  # way over target
+    assert adapter(eng) == 16
+    eng.prefill_chunk_budget = 16
+    assert adapter(eng) is None  # hysteresis: no fresh observations
+    eng.recent_ttfts += [0.01] * 4  # comfortably under half the target
+    assert adapter(eng) == 8
+    assert adapter.adaptations == 2
+
+
+def test_slo_adapter_clamps():
+    eng = _FakeEngine(budget=8, buckets=(4, 8))
+    adapter = SloBudgetAdapter(0.1, window=1, max_budget=12)
+    eng.recent_ttfts = [9.9]
+    assert adapter(eng) == 12  # grow clamped to max_budget
+    eng.prefill_chunk_budget = 12
+    eng.recent_ttfts = eng.recent_ttfts + [0.001]
+    assert adapter(eng) == 8  # shrink clamped to max(buckets)
+    eng.prefill_chunk_budget = 8
+    eng.recent_ttfts = eng.recent_ttfts + [0.001]
+    assert adapter(eng) is None  # already at the floor
+
+
+def test_slo_hook_errors_do_not_break_serving(setup):
+    model, cfg = setup
+
+    def bad_hook(engine):
+        raise RuntimeError("operator bug")
+
+    eng = ContinuousEngine(model, cfg, batch=1, max_len=16,
+                           max_prompt_len=8, prefill_budget_hook=bad_hook)
+    uid = eng.submit(_prompts([4], cfg.vocab)[0], max_new_tokens=2)
+    comps = eng.run()
+    assert [c.uid for c in comps] == [uid]
+    assert len(eng.hook_errors) > 0
+
+
+def test_slo_adapter_drives_live_engine(setup):
+    """End-to-end: an impossible SLO grows the live engine's budget."""
+    model, cfg = setup
+    adapter = SloBudgetAdapter(1e-9, window=1)
+    eng = ContinuousEngine(model, cfg, batch=2, max_len=16,
+                           max_prompt_len=8, prefill_chunk_budget=8,
+                           prefill_budget_hook=adapter)
+    start = eng.prefill_chunk_budget
+    for p in _prompts([4, 4, 4, 4], cfg.vocab):
+        eng.submit(p, max_new_tokens=2)
+    eng.run()
+    assert adapter.adaptations >= 1
+    assert eng.prefill_chunk_budget > start
+    assert not eng.hook_errors

@@ -1,0 +1,255 @@
+"""Priority-class scheduling: admission order, starvation bound,
+deadlines, and the cancel-path/finish-reason/ttft bugfix contracts.
+
+Pure scheduler-level tests — no jax, no model.  The engine-level
+counterpart (preemption + bit-identical resume) lives in
+``tests/test_preemption.py``.
+"""
+
+import math
+import time
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.serve.scheduler import (FINISH_REASONS, Completion, Request,
+                                   Scheduler)
+
+
+def _req(prio=1, **kw):
+    kw.setdefault("prompt", np.array([1, 2, 3]))
+    kw.setdefault("max_new_tokens", 4)
+    return Request(priority=prio, **kw)
+
+
+def _drain(sched, admissible=None):
+    """Admit -> bind -> finish until the queue is empty (1-slot scheduler);
+    returns uids in admission order."""
+    order = []
+    while True:
+        nxt = sched.next_admission(admissible)
+        if nxt is None:
+            break
+        slot, req = nxt
+        sched.bind(slot, req, first_token=0)
+        order.append(req.uid)
+        sched.finish(slot, "length")
+    return order
+
+
+# ---- priority classes -------------------------------------------------------
+
+
+def test_high_priority_admitted_before_earlier_low():
+    sched = Scheduler(1)
+    low = sched.submit(_req(prio=2))
+    high = sched.submit(_req(prio=0))
+    assert _drain(sched) == [high, low]
+
+
+def test_within_class_fifo():
+    sched = Scheduler(1, aging_every=10_000)  # aging off for this test
+    uids = {0: [], 1: [], 2: []}
+    rng = np.random.default_rng(0)
+    for prio in rng.integers(0, 3, 30):
+        uids[int(prio)].append(sched.submit(_req(prio=int(prio))))
+    order = _drain(sched)
+    for prio, expect in uids.items():
+        got = [u for u in order if u in set(expect)]
+        assert got == expect, f"class {prio} not FIFO"
+    # and classes themselves came out best-first (aging disabled)
+    assert order == uids[0] + uids[1] + uids[2]
+
+
+def test_admissible_gates_chosen_head_only():
+    """A blocked head blocks admission entirely — later requests in the
+    same class never jump it."""
+    sched = Scheduler(2, aging_every=10_000)
+    big = sched.submit(_req(prio=1))
+    small = sched.submit(_req(prio=1))
+    blocked = {big}
+    assert sched.next_admission(lambda r: r.uid not in blocked) is None
+    blocked.clear()
+    nxt = sched.next_admission(lambda r: True)
+    assert nxt is not None and nxt[1].uid == big
+    assert small in [r.uid for r in sched.pending]
+
+
+def test_aging_bounds_starvation_under_adversarial_arrivals():
+    """A low-priority request is admitted within ``aging_every``
+    admissions even when high-priority traffic never stops arriving."""
+    k = 4
+    sched = Scheduler(1, aging_every=k)
+    starved = sched.submit(_req(prio=5))
+    admitted = []
+    for i in range(3 * k):
+        sched.submit(_req(prio=0))  # adversary: endless urgent stream
+        slot, req = sched.next_admission()
+        sched.bind(slot, req, first_token=0)
+        admitted.append(req.uid)
+        sched.finish(slot, "length")
+        if starved in admitted:
+            break
+    assert starved in admitted
+    assert admitted.index(starved) <= k - 1
+
+
+# ---- property tests (skip without hypothesis) -------------------------------
+
+
+@given(prios=st.lists(st.integers(min_value=0, max_value=3),
+                      min_size=1, max_size=40),
+       aging=st.integers(min_value=1, max_value=8))
+@settings(max_examples=50, deadline=None)
+def test_property_within_class_admission_is_submission_order(prios, aging):
+    sched = Scheduler(1, aging_every=aging)
+    by_class = {}
+    for p in prios:
+        by_class.setdefault(p, []).append(sched.submit(_req(prio=p)))
+    order = _drain(sched)
+    assert sorted(order) == sorted(u for us in by_class.values() for u in us)
+    for p, expect in by_class.items():
+        assert [u for u in order if u in set(expect)] == expect
+
+
+@given(data=st.data(),
+       aging=st.integers(min_value=1, max_value=6))
+@settings(max_examples=50, deadline=None)
+def test_property_oldest_head_bypassed_at_most_aging_every(data, aging):
+    """Count, per admission, whether the oldest class head was bypassed;
+    runs of consecutive bypasses never exceed ``aging_every - 1`` — even
+    with adversarial arrivals interleaved between admissions."""
+    sched = Scheduler(1, aging_every=aging)
+    for p in data.draw(st.lists(st.integers(0, 3), min_size=2, max_size=10)):
+        sched.submit(_req(prio=p))
+    run = 0
+    for _ in range(60):
+        arrivals = data.draw(st.lists(st.integers(0, 3), max_size=3))
+        for p in arrivals:
+            sched.submit(_req(prio=p))
+        if sched.n_pending == 0:
+            break
+        oldest = min(r.uid for r in sched.pending)
+        slot, req = sched.next_admission()
+        sched.bind(slot, req, first_token=0)
+        sched.finish(slot, "length")
+        run = 0 if req.uid == oldest else run + 1
+        assert run <= aging - 1, (
+            f"oldest head bypassed {run} times with aging_every={aging}")
+
+
+# ---- deadlines --------------------------------------------------------------
+
+
+def test_expire_pending_drops_past_deadline_as_cancelled():
+    sched = Scheduler(1)
+    live = sched.submit(_req(timeout_s=60.0))
+    dead = sched.submit(_req(timeout_s=0.001))
+    nodeadline = sched.submit(_req())
+    time.sleep(0.005)
+    out = sched.expire_pending()
+    assert [c.uid for c in out] == [dead]
+    assert out[0].finish_reason == "cancelled" and out[0].tokens == []
+    assert {r.uid for r in sched.pending} == {live, nodeadline}
+    # lazily-dropped queue entry must not resurface at admission
+    assert _drain(sched) == [live, nodeadline]
+
+
+def test_timeout_validation():
+    with pytest.raises(ValueError):
+        _req(timeout_s=0.0)
+    with pytest.raises(ValueError):
+        _req(prio=-1)
+
+
+# ---- bugfix contracts -------------------------------------------------------
+
+
+def test_finish_reason_raises_on_unclassifiable_eviction():
+    """The old code fell through to a silent ``"length"`` for any evicted
+    slot — a cancelled request could masquerade as a natural finish."""
+    sched = Scheduler(1)
+    sched.submit(_req(max_new_tokens=10))
+    slot, req = sched.next_admission()
+    sched.bind(slot, req, first_token=0)
+    with pytest.raises(ValueError, match="no stop condition"):
+        sched.finish_reason(slot, cache_pos=5, max_len=32)
+    # the explicit-reason path still works, but only for known reasons
+    with pytest.raises(ValueError, match="unknown finish_reason"):
+        sched.finish(slot, "exploded")
+    comp = sched.finish(slot, "cancelled")
+    assert comp.finish_reason in FINISH_REASONS
+
+
+def test_finish_reason_classifies_natural_stops():
+    sched = Scheduler(1)
+    sched.submit(_req(max_new_tokens=2, stop_ids=(9,)))
+    slot, req = sched.next_admission()
+    sched.bind(slot, req, first_token=9)
+    assert sched.finish_reason(slot, cache_pos=4, max_len=32) == "stop"
+    sched.append_token(slot, 5)
+    assert sched.finish_reason(slot, cache_pos=5, max_len=32) == "length"
+    sched.finish(slot, "length")
+
+
+def test_ttft_is_nan_when_no_token_landed():
+    """``first_token_at == 0.0`` used to produce a huge negative
+    "latency" (0.0 minus a monotonic timestamp); now it is NaN, which
+    the stats reducers skip explicitly."""
+    comp = Completion(uid=0, prompt_len=1, tokens=[],
+                      finish_reason="cancelled",
+                      submitted_at=time.monotonic(), first_token_at=0.0)
+    assert math.isnan(comp.ttft)
+    served = Completion(uid=1, prompt_len=1, tokens=[3],
+                        finish_reason="length", submitted_at=1.0,
+                        first_token_at=1.5)
+    assert served.ttft == pytest.approx(0.5)
+
+
+def test_mass_cancel_is_not_quadratic():
+    """20k submit + cancel cycles with a deep queue: O(1) cancels finish
+    in well under the bound; the old per-cancel deque scan was O(n) each
+    (~minutes at this size)."""
+    sched = Scheduler(1)
+    uids = [sched.submit(_req()) for _ in range(20_000)]
+    t0 = time.monotonic()
+    for uid in uids[1:]:  # cancel all but the head
+        assert sched.cancel_pending(uid) is not None
+    elapsed = time.monotonic() - t0
+    assert elapsed < 5.0, f"mass cancel took {elapsed:.1f}s (quadratic?)"
+    assert sched.n_pending == 1
+    assert _drain(sched) == [uids[0]]  # lazy deletions all skipped
+
+
+def test_find_and_cancel_pending_are_uid_indexed():
+    sched = Scheduler(2)
+    uid = sched.submit(_req())
+    assert sched.find(uid) == ("pending", None)
+    assert sched.find(uid + 999) == (None, None)
+    comp = sched.cancel_pending(uid)
+    assert comp.uid == uid and comp.finish_reason == "cancelled"
+    assert sched.cancel_pending(uid) is None  # idempotent
+
+
+def test_requeue_preserves_uid_and_submitted_at():
+    sched = Scheduler(1)
+    uid = sched.submit(_req(prio=2))
+    slot, req = sched.next_admission()
+    sched.bind(slot, req, first_token=7)
+    sched.append_token(slot, 8)
+    victim, tokens, first_at = sched.preempt(slot)
+    assert victim.uid == uid and tokens == [7, 8] and first_at > 0
+    assert sched.slots[slot] is None  # no completion emitted
+    import dataclasses
+    resume = dataclasses.replace(
+        victim, prompt=np.concatenate([victim.prompt,
+                                       np.asarray(tokens, np.int32)]),
+        max_new_tokens=victim.max_new_tokens - len(tokens))
+    sched.requeue(resume)
+    slot2, req2 = sched.next_admission()
+    assert req2.uid == uid  # same uid across lives
+    assert req2.submitted_at == victim.submitted_at  # clock keeps running
+    sched.bind(slot2, req2, first_token=9)
+    comp = sched.finish(slot2, "length")
+    assert comp.uid == uid
